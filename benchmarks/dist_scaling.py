@@ -1,0 +1,83 @@
+"""Beyond-paper: distributed-dedup scaling across index shards.
+
+Runs the shard_map dedup step under 1/2/4/8 virtual devices (subprocesses —
+device count is fixed at jax init) on the identical stream and reports
+throughput plus admitted-count consistency: sharding the index must not
+change *what* is admitted (recall-monotone merge, DESIGN.md §2), only how
+fast. On real hardware the shards are pod slices; here the virtual devices
+share one CPU so per-shard *work* (distance evals/shard) is the proxy:
+admitted counts must agree across shard counts while per-shard corpus
+shrinks ~linearly.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+_WORKER = """
+import time
+import numpy as np, jax, jax.numpy as jnp
+nshards = {nshards}
+mesh = jax.make_mesh((nshards, 1), ("data", "model"))
+from repro.core.hnsw import HNSWConfig, sample_levels
+from repro.core.sharded import sharded_init, make_sharded_dedup_step
+from repro.core.bitmap import pack_bitmaps, popcount
+from repro.core.hashing import hash_seeds
+from repro.core.shingle import shingle_hashes
+from repro.kernels import ops
+from repro.data import DATASET_PRESETS, SyntheticCorpus
+
+cfg = HNSWConfig(capacity=8192 // nshards, words=128, M=12, M0=24,
+                 ef_construction=32, ef_search=32, max_level=3)
+states = sharded_init(cfg, mesh)
+step = jax.jit(make_sharded_dedup_step(cfg, mesh, tau=0.538, k=4))
+seeds = hash_seeds(112)
+src = SyntheticCorpus(DATASET_PRESETS["common_crawl"])
+admitted = 0
+t_steady = 0.0
+for c in range({cycles}):
+    toks, lens, _ = src.next_batch({batch})
+    sh = shingle_hashes(jnp.asarray(toks, jnp.uint32),
+                        jnp.asarray(lens, jnp.int32), 5)
+    sigs = ops.minhash(sh, seeds)
+    bm = pack_bitmaps(sigs, T=4096)
+    t0 = time.time()
+    states, keep = step(states, bm, popcount(bm),
+                        jnp.asarray(sample_levels({batch}, cfg, seed=c)))
+    keep.block_until_ready()
+    if c > 0:
+        t_steady += time.time() - t0
+    admitted += int(keep.sum())
+print("RESULT", admitted, round(({cycles}-1)*{batch}/t_steady, 1))
+"""
+
+
+def run(quick: bool = False):
+    cycles, batch = (3, 256) if quick else (4, 512)
+    src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
+    rows = []
+    base_admitted = None
+    for nshards in (1, 2, 4, 8):
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={nshards}",
+                   PYTHONPATH=src_dir)
+        code = textwrap.dedent(_WORKER.format(nshards=nshards, cycles=cycles,
+                                              batch=batch))
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=560)
+        if out.returncode != 0:
+            rows.append((f"dist_scaling/shards={nshards}", -1.0,
+                         "ERROR:" + out.stderr.strip().splitlines()[-1][:80]))
+            continue
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
+        _, admitted, tp = line.split()
+        if base_admitted is None:
+            base_admitted = int(admitted)
+        drift = abs(int(admitted) - base_admitted)
+        rows.append((f"dist_scaling/shards={nshards}",
+                     round(1e6 / float(tp), 1),
+                     f"docs_per_s={tp};admitted={admitted};"
+                     f"admit_drift_vs_1shard={drift}"))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig 7: per-stage latency breakdown (signature / in-batch / search /
+insert) and document outcomes per cycle, FOLD vs baselines."""
+from __future__ import annotations
+
+from benchmarks.common import run_pipeline
+from repro.baselines import DPKPipeline, RawHNSWPipeline
+from repro.core.dedup import FoldConfig, FoldPipeline
+
+
+def run(quick: bool = False):
+    cycles, batch = (3, 256) if quick else (5, 512)
+    hn = dict(capacity=8192, ef_construction=48, ef_search=48)
+    rows = []
+    for name, mk in [
+        ("fold", lambda: FoldPipeline(FoldConfig(threshold_space="minhash", **hn))),
+        ("dpk", lambda: DPKPipeline(capacity=1 << 14)),
+        ("faiss_jaccard", lambda: RawHNSWPipeline("minhash_jaccard", **hn)),
+    ]:
+        keep, stats = run_pipeline(mk(), cycles=cycles, batch=batch)
+        last = stats[-1]
+        us = last["wall"] / batch * 1e6
+        parts = ";".join(f"{k[2:]}={last[k]*1e3:.0f}ms" for k in
+                         ("t_signature", "t_in_batch", "t_search", "t_insert"))
+        outc = (f"drop_batch={last['n_batch_drop']};"
+                f"drop_index={last['n_index_drop']};insert={last['n_insert']}")
+        rows.append((f"fig7/{name}", round(us, 1), parts + ";" + outc))
+    return rows

@@ -1,0 +1,36 @@
+"""Fig 8: FOLD ablation — popcount caching x SIMD(kernel) toggles.
+
+'SIMD' on TPU = the Pallas bitmap-Jaccard kernel path (VPU XOR+popcount);
+'no SIMD' = the scalar-equivalent jnp path recomputing per comparison.
+All arms share the identical index and bitmaps; recall must be unchanged
+(the paper reports 1.00 across arms) while throughput varies.
+"""
+from __future__ import annotations
+
+from benchmarks.common import recall_fp, run_pipeline
+from repro.baselines import BruteForcePipeline
+from repro.core.dedup import FoldConfig, FoldPipeline
+
+
+def run(quick: bool = False):
+    cycles, batch = (3, 256) if quick else (4, 512)
+    ref_keep, _ = run_pipeline(BruteForcePipeline(capacity=1 << 14),
+                               cycles=cycles, batch=batch)
+    rows = []
+    base = None
+    for cache in (False, True):
+        for simd in (False, True):
+            fc = FoldConfig(capacity=8192, ef_construction=48, ef_search=48,
+                            threshold_space="minhash", cached=cache,
+                            use_kernel=simd)
+            keep, stats = run_pipeline(FoldPipeline(fc), cycles=cycles,
+                                       batch=batch)
+            rec, _ = recall_fp(ref_keep, keep)
+            tp = batch / stats[-1]["wall"]
+            if base is None:
+                base = tp
+            rows.append((f"fig8/cache={int(cache)}_simd={int(simd)}",
+                         round(1e6 / tp, 1),
+                         f"recall={rec:.3f};docs_per_s={tp:.0f};"
+                         f"speedup={tp/base:.2f}x"))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig 9: long-horizon throughput stability (no late-scale collapse).
+
+Scaled from the paper's 50M docs to a CPU-sized stream: many cycles, same
+protocol; the metric is the min/max throughput band after warmup.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_pipeline
+from repro.core.dedup import FoldConfig, FoldPipeline
+
+
+def run(quick: bool = False):
+    cycles, batch = (6, 256) if quick else (12, 512)
+    fc = FoldConfig(capacity=1 << 14, ef_construction=48, ef_search=48,
+                    threshold_space="minhash")
+    keep, stats = run_pipeline(FoldPipeline(fc), cycles=cycles, batch=batch)
+    tps = [s["docs_per_s"] for s in stats[1:]]   # drop compile cycle
+    lo, hi, end = min(tps), max(tps), tps[-1]
+    return [("fig9/fold_longrun", round(1e6 / end, 1),
+             f"tp_band=[{lo:.0f},{hi:.0f}];tp_final={end:.0f};"
+             f"corpus={int(keep.sum())}docs;stable={hi/max(lo,1e-9)<2.5}")]

@@ -1,0 +1,162 @@
+"""§Roofline: derive the three terms per (arch x shape x mesh) from the
+dry-run artifacts written by launch/dryrun.py.
+
+  compute    = HLO_FLOPs_per_device / 197 TFLOP/s (bf16, v5e)
+  memory     = HBM-traffic estimate / 819 GB/s
+  collective = wire_bytes_per_device / 50 GB/s ICI link
+
+(The dry-run HLO is the post-SPMD per-device program, so per-device numbers
+divide out the chip count already; loop bodies are multiplied by their trip
+counts — see launch/hlocost.py.)
+
+Two memory estimates are reported:
+  bytes_upper  — per-use operand+result bytes at op/fusion boundaries,
+                 loop-aware (an upper bound: it counts VMEM-resident
+                 re-reads inside loops as HBM traffic);
+  hbm_est      — buffer-traffic model from memory_analysis():
+                 args + outputs + 2 x temps (write+read). The §Roofline
+                 memory term uses hbm_est; bytes_upper is diagnostic.
+
+MODEL_FLOPS = matmul params-FLOPs (6ND train / 2ND prefill, N_active for
+MoE) PLUS causal attention flops (2*L*B*S^2*H*hd train-fwd, x3 with
+backward; window-limited for local layers) and KV-cache flops for decode
+(4*L*B*S*H*hd per step). The MODEL/HLO ratio flags remat and
+masked-attention waste.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from repro.configs import ALIASES, get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+__all__ = ["run", "load_cells", "roofline_terms", "model_flops"]
+
+
+def load_cells(root="experiments/dryrun"):
+    cells = {}
+    for mesh_tag in ("pod16x16", "pod2x16x16"):
+        d = os.path.join(root, mesh_tag)
+        if not os.path.isdir(d):
+            continue
+        for f in sorted(os.listdir(d)):
+            if f.endswith(".json"):
+                with open(os.path.join(d, f)) as fh:
+                    cells[(mesh_tag, f[:-5])] = json.load(fh)
+    return cells
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE: topk of E experts)."""
+    from repro.models import transformer as T, whisper as W
+    from repro.models.common import abstract_params, tree_size
+    specs = (W.whisper_param_specs(cfg) if cfg.family == "encdec"
+             else T.param_specs(cfg))
+    total = tree_size(abstract_params(specs))
+    if cfg.n_experts and cfg.topk:
+        f = cfg.moe_d_ff or cfg.d_ff
+        moe = cfg.n_layers * cfg.n_experts * 3 * cfg.d_model * f
+        total = total - moe + moe * cfg.topk / cfg.n_experts
+    return int(total)
+
+
+def attn_flops_forward(cfg, S: int, batch: int, *, decode: bool) -> float:
+    """Useful attention score+value FLOPs (excludes qkv/out projections,
+    which live in the param count)."""
+    if cfg.family == "ssm":
+        return 0.0
+    H, hd = cfg.n_heads, cfg.hd
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // max(cfg.attn_every, 1)
+    elif cfg.family == "encdec":
+        n_attn = cfg.n_layers + cfg.encoder_layers
+    else:
+        n_attn = cfg.n_layers
+    if decode:
+        # one token vs an S-long cache: qK + pV = 4*H*hd*S per layer
+        return n_attn * batch * 4.0 * H * hd * S
+    if cfg.window_pattern > 1:
+        # local layers see min(S/2_avg, window) context
+        per = cfg.window_pattern
+        n_local = n_attn - n_attn // per
+        n_global = n_attn - n_local
+        ctx_local = min(S / 2, cfg.window_size)
+        return (n_global * batch * S * 4.0 * H * hd * (S / 2)
+                + n_local * batch * S * 4.0 * H * hd * ctx_local)
+    return n_attn * batch * S * 4.0 * H * hd * (S / 2)
+
+
+def model_flops(arch: str, shape_name: str, devices: int) -> float:
+    """Per-device useful model FLOPs for the cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    n_act = active_params(cfg)
+    if sh.kind == "train":
+        tokens = sh.batch * sh.seq
+        total = (6.0 * n_act * tokens
+                 + 3.0 * attn_flops_forward(cfg, sh.seq, sh.batch, decode=False))
+        return total / devices
+    if sh.kind == "prefill":
+        tokens = sh.batch * sh.seq
+        total = (2.0 * n_act * tokens
+                 + attn_flops_forward(cfg, sh.seq, sh.batch, decode=False))
+        return total / devices
+    total = (2.0 * n_act * sh.batch
+             + attn_flops_forward(cfg, sh.seq, sh.batch, decode=True))
+    return total / devices
+
+
+def hbm_bytes_est(rec: dict) -> float:
+    m = rec.get("memory_analysis") or {}
+    args = m.get("argument_size") or 0
+    out = m.get("output_size") or 0
+    temp = m.get("temp_size") or 0
+    return float(args + out + 2 * temp)
+
+
+def roofline_terms(rec: dict) -> dict:
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = hbm_bytes_est(rec) / HBM_BW
+    t_coll = rec["wire_bytes_per_device"] / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    out = {"t_compute_s": t_comp, "t_memory_s": t_mem,
+           "t_collective_s": t_coll, "dominant": dom[0],
+           "bound_s": dom[1],
+           "t_memory_upper_s": rec["bytes_per_device"] / HBM_BW}
+    if rec["arch"] != "fold_dedup":
+        mf = model_flops(rec["arch"], rec["shape"], rec["devices"])
+        out["model_flops_per_device"] = mf
+        out["flops_ratio"] = mf / max(rec["flops_per_device"], 1)
+        # fraction of roofline the cell achieves if the dominant term is
+        # the wall-clock: useful-compute-time / bound-time
+        out["roofline_fraction"] = (mf / PEAK_FLOPS) / max(dom[1], 1e-12)
+    return out
+
+
+def run(quick: bool = False):
+    cells = load_cells()
+    rows = []
+    for (mesh_tag, tag), rec in sorted(cells.items()):
+        if quick and mesh_tag != "pod16x16":
+            continue
+        t = roofline_terms(rec)
+        extra = ""
+        if "roofline_fraction" in t:
+            extra = (f";model/hlo={t['flops_ratio']:.2f}"
+                     f";roofline={t['roofline_fraction']:.3f}")
+        rows.append((f"roofline/{mesh_tag}/{tag}",
+                     round(t["bound_s"] * 1e6, 1),
+                     f"dom={t['dominant']};comp={t['t_compute_s']:.3f}s;"
+                     f"mem={t['t_memory_s']:.3f}s;coll={t['t_collective_s']:.3f}s"
+                     + extra))
+    if not rows:
+        rows.append(("roofline/missing", 0.0,
+                     "run launch/dryrun.py --all first"))
+    return rows

@@ -1,0 +1,44 @@
+"""Benchmark suite: one section per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints `name,us_per_call,derived` CSV rows per the harness contract, where
+us_per_call is the per-document processing latency of the subject system
+and `derived` carries the figure's headline metric (recall, speedup, ...).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
+            "fig9_largescale", "table3_collisions", "appendix_hamming",
+            "dist_scaling", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller corpora / fewer cycles")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    sections = [args.only] if args.only else SECTIONS
+    print("name,us_per_call,derived")
+    ok = True
+    for name in sections:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            rows = mod.run(quick=args.quick)
+            for r in rows:
+                print(",".join(str(x) for x in r), flush=True)
+        except Exception as e:  # keep the suite going; report the failure
+            ok = False
+            print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 1: runtime + recall of every baseline vs brute-force ground truth.
+
+The paper runs 3M Common Crawl docs (brute force: 5 days). We run a scaled
+stream through the same protocol; recall is vs exact online brute force.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import recall_fp, run_pipeline
+from repro.baselines import (BruteForcePipeline, DPKPipeline, FlatLSHPipeline,
+                             PrefixFilterPipeline, RawHNSWPipeline)
+from repro.core.dedup import FoldConfig, FoldPipeline
+
+
+def _pipelines(quick):
+    cap = 1 << 14
+    hn = dict(capacity=8192, ef_construction=48, ef_search=48)
+    return [
+        ("dpk", lambda: DPKPipeline(capacity=cap)),
+        ("prefix_filter", lambda: PrefixFilterPipeline()),
+        ("flat_topk4", lambda: FlatLSHPipeline(topk=4, capacity=cap)),
+        ("flat_topk160", lambda: FlatLSHPipeline(topk=160, capacity=cap)),
+        ("faiss_jaccard", lambda: RawHNSWPipeline("minhash_jaccard", **hn)),
+        ("faiss_hamming", lambda: RawHNSWPipeline("hamming", **hn)),
+        ("fold", lambda: FoldPipeline(FoldConfig(
+            threshold_space="minhash", **hn))),
+    ]
+
+
+def run(quick: bool = False):
+    cycles, batch = (3, 256) if quick else (5, 512)
+    ref_keep, ref_stats = run_pipeline(BruteForcePipeline(capacity=1 << 14),
+                                       cycles=cycles, batch=batch)
+    # steady-state latency: last cycle (earlier cycles pay jit compile)
+    rows = [("table1/brute_force",
+             round(ref_stats[-1]["wall"] / batch * 1e6, 1), "recall=1.000")]
+    for name, mk in _pipelines(quick):
+        keep, stats = run_pipeline(mk(), cycles=cycles, batch=batch)
+        rec, fp = recall_fp(ref_keep, keep)
+        us = stats[-1]["wall"] / batch * 1e6
+        rows.append((f"table1/{name}", round(us, 1),
+                     f"recall={rec:.3f};fp={fp:.4f}"))
+    return rows

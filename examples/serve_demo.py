@@ -1,0 +1,11 @@
+"""Batched serving demo: greedy generation with KV caches.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch zamba2-7b
+(runs the reduced config on CPU; --full selects the paper-exact config)
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts. The narrative sections are maintained by hand in
+EXPERIMENTS.md; this script rewrites only the blocks between the
+AUTO-BEGIN/AUTO-END markers.
+
+  PYTHONPATH=src python scripts/gen_experiments.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import (hbm_bytes_est, load_cells, model_flops,
+                                 roofline_terms, HBM_BW, LINK_BW, PEAK_FLOPS)
+
+HBM_PER_CHIP = 16e9
+
+
+def gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def dryrun_table(cells, mesh_tag):
+    rows = ["| cell | kind | ga | params | compile s | flops/dev | "
+            "wire B/dev | args GB | temp GB | fits 16GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for (mt, tag), rec in sorted(cells.items()):
+        if mt != mesh_tag:
+            continue
+        m = rec["memory_analysis"]
+        resident = (m["argument_size"] or 0) + (m["temp_size"] or 0) \
+            + (m["output_size"] or 0)
+        fits = "yes" if resident <= HBM_PER_CHIP else \
+            f"NO ({resident/1e9:.0f}GB)"
+        rows.append(
+            f"| {tag} | {rec['kind']} | {rec.get('grad_accum','-')} | "
+            f"{rec['n_params']/1e9:.2f}B | {rec['t_compile_s']} | "
+            f"{rec['flops_per_device']:.2e} | "
+            f"{rec['wire_bytes_per_device']:.2e} | "
+            f"{gb(m['argument_size'] or 0)} | {gb(m['temp_size'] or 0)} | "
+            f"{fits} |")
+    return "\n".join(rows)
+
+
+def roofline_table(cells, mesh_tag):
+    rows = ["| cell | comp s | mem s | coll s | dominant | MODEL_FLOPs/dev |"
+            " model/HLO | roofline frac | next lever |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (mt, tag), rec in sorted(cells.items()):
+        if mt != mesh_tag:
+            continue
+        t = roofline_terms(rec)
+        if "model_flops_per_device" in t:
+            mfl = f"{t['model_flops_per_device']:.2e}"
+            ratio = f"{t['flops_ratio']:.2f}"
+            frac = f"{t['roofline_fraction']:.3f}"
+        else:
+            mfl = ratio = frac = "-"
+        lever = {
+            "compute": "cut masked-attention waste (zig-zag causal) / "
+                       "larger per-chip batch",
+            "memory": "fuse scatter paths; shrink remat carries",
+            "collective": "fewer/smaller TP activation ARs (bf16 on real "
+                          "TPU; AR->RS pass); amortize FSDP gathers",
+        }[t["dominant"]]
+        rows.append(
+            f"| {tag} | {t['t_compute_s']:.3f} | {t['t_memory_s']:.3f} | "
+            f"{t['t_collective_s']:.3f} | **{t['dominant']}** | {mfl} | "
+            f"{ratio} | {frac} | {lever} |")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load_cells()
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    for marker, mesh_tag, fn in (
+            ("DRYRUN-SINGLE", "pod16x16", dryrun_table),
+            ("DRYRUN-MULTI", "pod2x16x16", dryrun_table),
+            ("ROOFLINE-SINGLE", "pod16x16", roofline_table),
+            ("ROOFLINE-MULTI", "pod2x16x16", roofline_table)):
+        begin = f"<!-- AUTO-BEGIN {marker} -->"
+        end = f"<!-- AUTO-END {marker} -->"
+        b, e = text.index(begin), text.index(end)
+        text = (text[:b + len(begin)] + "\n" + fn(cells, mesh_tag) + "\n"
+                + text[e:])
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables regenerated",
+          f"({len(cells)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Baselines from the paper's evaluation (§3, §6).
+
+All pipelines share the FOLD signature stage and expose the same
+`process_batch(tokens, lengths) -> (keep_mask, stats)` interface so the
+benchmarks compare like for like:
+
+  BruteForcePipeline   — exact online admission (Table 1 ground truth; the
+                         paper notes DPK's detection is equivalent to it)
+  DPKPipeline          — MinHash-LSH banding + Jaccard verification (IBM DPK)
+  FlatLSHPipeline      — Milvus MINHASH_LSH analogue: bucketed flat retrieval
+                         with a topK candidate budget
+  PrefixFilterPipeline — frequency-ordered prefix-filter set-similarity join
+  RawHNSWPipeline      — FAISS (Jaccard) / FAISS (Hamming): HNSW over raw
+                         MinHash signatures with the naive metric
+"""
+from repro.baselines.base import SignatureStage
+from repro.baselines.brute import BruteForcePipeline
+from repro.baselines.dpk import DPKPipeline
+from repro.baselines.flat import FlatLSHPipeline
+from repro.baselines.prefix_filter import PrefixFilterPipeline
+from repro.baselines.hnsw_raw import RawHNSWPipeline
+
+__all__ = ["SignatureStage", "BruteForcePipeline", "DPKPipeline",
+           "FlatLSHPipeline", "PrefixFilterPipeline", "RawHNSWPipeline"]

@@ -1,0 +1,62 @@
+"""Shared signature stage + LSH banding utilities for all baselines."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import hash_seeds
+from repro.core.shingle import shingle_hashes
+from repro.kernels import ops
+
+__all__ = ["SignatureStage", "band_keys", "pick_bands"]
+
+
+class SignatureStage:
+    """Step ① shared by every pipeline: tokens -> (B, H) MinHash signatures."""
+
+    def __init__(self, num_hashes: int = 112, shingle_n: int = 5,
+                 seed: int = 0, use_kernel: bool = True):
+        self.num_hashes = num_hashes
+        self.shingle_n = shingle_n
+        self.use_kernel = use_kernel
+        self.seeds = hash_seeds(num_hashes, seed)
+
+    def __call__(self, tokens, lengths) -> jnp.ndarray:
+        sh = shingle_hashes(jnp.asarray(tokens, jnp.uint32),
+                            jnp.asarray(lengths, jnp.int32), self.shingle_n)
+        return ops.minhash(sh, self.seeds, use_kernel=self.use_kernel)
+
+
+def pick_bands(num_hashes: int, tau: float) -> tuple[int, int]:
+    """Choose (bands, rows) with b*r <= H whose S-curve threshold
+    (1/b)^(1/r) is closest to tau. Standard MinHash-LSH calibration."""
+    best = (1, num_hashes)
+    best_err = float("inf")
+    for r in range(1, num_hashes + 1):
+        b = num_hashes // r
+        if b < 1:
+            break
+        thr = (1.0 / b) ** (1.0 / r) if b > 1 else 1.0
+        err = abs(thr - tau)
+        if err < best_err:
+            best_err, best = err, (b, r)
+    return best
+
+
+def band_keys(sigs: np.ndarray, bands: int, rows: int) -> np.ndarray:
+    """(N, H) uint32 -> (N, bands) uint64 band-bucket keys (FNV-1a fold)."""
+    sigs = np.asarray(sigs, dtype=np.uint64)
+    n = sigs.shape[0]
+    keys = np.empty((n, bands), dtype=np.uint64)
+    with np.errstate(over="ignore"):  # uint64 wraparound is intentional
+        for b in range(bands):
+            chunk = sigs[:, b * rows:(b + 1) * rows]
+            h = np.full(n, 0xCBF29CE484222325, dtype=np.uint64)
+            for r in range(chunk.shape[1]):
+                h = (h ^ chunk[:, r]) * np.uint64(0x100000001B3)
+            # mix in the band index so identical row values in different
+            # bands don't collide into one bucket space
+            keys[:, b] = h ^ (np.uint64(b) * np.uint64(0x9E3779B97F4A7C15))
+    return keys

@@ -1,0 +1,2 @@
+from repro.core.dedup import FoldConfig, FoldPipeline
+from repro.core.hnsw import HNSWConfig, HNSWState, hnsw_init, hnsw_search, hnsw_insert_batch

@@ -1,0 +1,173 @@
+"""FOLD bitmap signatures and the three candidate distances (paper §4.2, §5).
+
+A MinHash signature (H uint32 lanes) is folded into a T-bit bitmap:
+bit[sig[h] mod T] = 1. The bitmap is packed into W = T/32 uint32 words.
+Bitmap-Jaccard needs only three popcounts (paper Algorithm 1):
+
+    px = popcount(A xor B)
+    I  = (pa + pb - px) / 2       U = (pa + pb + px) / 2
+    J  = I / U                    D = 1 - J = 2 px / (pa + pb + px)
+
+(The paper's "D = J = 2px/(...)" line is a typo: 2px/(pa+pb+px) equals 1-J;
+we implement similarity and distance consistently with the derivation.)
+
+Also provided: raw MinHash-Jaccard (fraction of equal lanes — the FAISS
+(Jaccard) baseline metric) and normalized Hamming over the packed signature
+bits (the FAISS (Hamming) baseline metric, App. A.1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "DEFAULT_T",
+    "pack_bitmaps",
+    "chunked_pairwise_bitmap_jaccard",
+    "popcount",
+    "bitmap_jaccard_sim",
+    "bitmap_jaccard_dist",
+    "minhash_jaccard_sim",
+    "hamming_sim",
+    "pairwise_bitmap_jaccard",
+    "pairwise_minhash_jaccard",
+    "pairwise_hamming",
+]
+
+DEFAULT_T = 4096  # bitmap size in bits; W = 128 uint32 words
+
+
+@functools.partial(jax.jit, static_argnames=("T",))
+def pack_bitmaps(sigs: jnp.ndarray, T: int = DEFAULT_T) -> jnp.ndarray:
+    """Fold MinHash signatures into packed bitmaps.
+
+    sigs: (B, H) uint32  ->  (B, W) uint32 with W = T // 32.
+
+    Position p = sig mod T sets word p//32 bit p%32. Collisions (two lanes
+    hitting the same bit) are by design — they are the tie-breaking signal
+    (paper §4.2).
+    """
+    assert T % 32 == 0, "T must be a multiple of 32"
+    W = T // 32
+    B = sigs.shape[0]
+    pos = (sigs % jnp.uint32(T)).astype(jnp.int32)  # (B, H)
+    rows = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], pos.shape)
+    # Scatter-set booleans (idempotent: duplicate writes all write True),
+    # then pack 32 bools per uint32 word. O(B*T) and fully vectorized.
+    bits = jnp.zeros((B, T), dtype=jnp.bool_).at[rows, pos].set(True)
+    lanes = bits.reshape(B, W, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(lanes * weights[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def popcount(words: jnp.ndarray, axis=-1) -> jnp.ndarray:
+    """Total number of set bits along `axis` of a packed uint32 array."""
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32), axis=axis)
+
+
+# ---------------------------------------------------------------- distances
+def bitmap_jaccard_sim(a: jnp.ndarray, b: jnp.ndarray, pa=None, pb=None) -> jnp.ndarray:
+    """Bitmap-Jaccard similarity between packed bitmaps (last dim = words).
+
+    pa/pb: optional cached popcounts (paper §5.2). Empty-vs-empty -> 1.0.
+    """
+    if pa is None:
+        pa = popcount(a)
+    if pb is None:
+        pb = popcount(b)
+    px = popcount(a ^ b)
+    union2 = pa + pb + px  # = 2U
+    inter2 = pa + pb - px  # = 2I
+    return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1), 1.0)
+
+
+def bitmap_jaccard_dist(a, b, pa=None, pb=None):
+    return 1.0 - bitmap_jaccard_sim(a, b, pa, pb)
+
+
+def minhash_jaccard_sim(sa: jnp.ndarray, sb: jnp.ndarray) -> jnp.ndarray:
+    """Raw MinHash-Jaccard estimate: fraction of equal uint32 lanes."""
+    return jnp.mean((sa == sb).astype(jnp.float32), axis=-1)
+
+
+def hamming_sim(sa: jnp.ndarray, sb: jnp.ndarray) -> jnp.ndarray:
+    """Normalized Hamming similarity over packed signature *bits* (App. A.1)."""
+    bits = sa.shape[-1] * 32
+    dh = popcount(sa ^ sb)
+    return 1.0 - dh / jnp.float32(bits)
+
+
+# ------------------------------------------------- pairwise (Q, N) variants
+@functools.partial(jax.jit, static_argnames=("row_chunk", "col_chunk"))
+def chunked_pairwise_bitmap_jaccard(qs, db, pq=None, pb=None, *,
+                                    row_chunk: int = 512,
+                                    col_chunk: int = 2048):
+    """(Q, W) x (N, W) -> (Q, N) without materializing the (Q, N, W) XOR
+    tensor: nested lax.map over row/col blocks bounds the intermediate at
+    (row_chunk, col_chunk, W). The jnp analogue of the Pallas kernel's VMEM
+    tiling, for host-side / dry-run paths at ingest scale."""
+    Q, W = qs.shape
+    N = db.shape[0]
+    if pq is None:
+        pq = popcount(qs)
+    if pb is None:
+        pb = popcount(db)
+    rpad = (-Q) % row_chunk
+    cpad = (-N) % col_chunk
+    qs_p = jnp.pad(qs, ((0, rpad), (0, 0)))
+    pq_p = jnp.pad(pq, (0, rpad))
+    db_p = jnp.pad(db, ((0, cpad), (0, 0)))
+    pb_p = jnp.pad(pb, (0, cpad))
+    nr, nc = qs_p.shape[0] // row_chunk, db_p.shape[0] // col_chunk
+
+    def row_block(args):
+        qb, pqb = args  # (rc, W), (rc,)
+
+        def col_block(args2):
+            dbb, pbb = args2
+            px = popcount(qb[:, None, :] ^ dbb[None, :, :])
+            union2 = pqb[:, None] + pbb[None, :] + px
+            inter2 = pqb[:, None] + pbb[None, :] - px
+            return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1), 1.0)
+
+        blocks = jax.lax.map(col_block,
+                             (db_p.reshape(nc, col_chunk, W),
+                              pb_p.reshape(nc, col_chunk)))
+        return blocks.transpose(1, 0, 2).reshape(row_chunk, -1)
+
+    rows = jax.lax.map(row_block, (qs_p.reshape(nr, row_chunk, W),
+                                   pq_p.reshape(nr, row_chunk)))
+    return rows.reshape(-1, db_p.shape[0])[:Q, :N]
+
+
+@jax.jit
+def pairwise_bitmap_jaccard(qs: jnp.ndarray, db: jnp.ndarray,
+                            pq: jnp.ndarray | None = None,
+                            pb: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(Q, W) x (N, W) -> (Q, N) bitmap-Jaccard similarity.
+
+    Pure-jnp reference path; the Pallas kernel in kernels/bitmap_jaccard.py
+    computes the same matrix with VMEM tiling (see kernels/ref.py).
+    """
+    if pq is None:
+        pq = popcount(qs)
+    if pb is None:
+        pb = popcount(db)
+    px = popcount(qs[:, None, :] ^ db[None, :, :])  # (Q, N)
+    union2 = pq[:, None] + pb[None, :] + px
+    inter2 = pq[:, None] + pb[None, :] - px
+    return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1), 1.0)
+
+
+@jax.jit
+def pairwise_minhash_jaccard(qs: jnp.ndarray, db: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((qs[:, None, :] == db[None, :, :]).astype(jnp.float32), axis=-1)
+
+
+@jax.jit
+def pairwise_hamming(qs: jnp.ndarray, db: jnp.ndarray) -> jnp.ndarray:
+    bits = qs.shape[-1] * 32
+    dh = popcount(qs[:, None, :] ^ db[None, :, :])
+    return 1.0 - dh / jnp.float32(bits)

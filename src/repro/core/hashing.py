@@ -1,0 +1,55 @@
+"""Vectorized integer hashing primitives (murmur3-style finalizers).
+
+All hashing in FOLD operates on uint32 lanes so it vectorizes on the TPU VPU
+(8x128 lanes) and wraps around on overflow exactly like the C++ reference.
+We deliberately avoid `mod p` universal hashing (needs 64-bit mults) and use
+seeded bit-mix finalizers, the standard practice in MinHash implementations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "UINT32_MAX",
+    "fmix32",
+    "hash_seeds",
+    "multihash",
+]
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+_GOLDEN = jnp.uint32(0x9E3779B9)  # 2^32 / phi
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+
+
+def fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 32-bit finalizer. Bijective on uint32; excellent avalanche."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_seeds(num: int, base_seed: int = 0x5EED) -> jnp.ndarray:
+    """Derive `num` independent hash-function seeds. Shape (num,) uint32."""
+    idx = jnp.arange(num, dtype=jnp.uint32)
+    return fmix32(idx * _GOLDEN + jnp.uint32(base_seed))
+
+
+def multihash(values: jnp.ndarray, seeds: jnp.ndarray) -> jnp.ndarray:
+    """Apply `H` seeded hash functions to each value.
+
+    values: (...,) uint32
+    seeds:  (H,) uint32
+    returns (H, ...) uint32 — hash h applied to every value.
+    """
+    values = values.astype(jnp.uint32)
+    seeds = seeds.astype(jnp.uint32)
+    # Broadcast: (H, 1...) xor (1, ...) then remix. Seeding both before and
+    # after the mix decorrelates the H streams.
+    expanded = values[None, ...] ^ seeds.reshape((-1,) + (1,) * values.ndim)
+    return fmix32(expanded * _GOLDEN + seeds.reshape((-1,) + (1,) * values.ndim))

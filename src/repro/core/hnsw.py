@@ -1,0 +1,380 @@
+"""Array-based HNSW for TPU/JAX — the FOLD index (paper §2.2, §4).
+
+CPU HNSW implementations (FAISS/hnswlib) are pointer-chasing structures with
+per-node mallocs and locks. That shape is hostile to XLA, so we re-express
+HNSW as fixed-capacity dense arrays with functional updates:
+
+  vectors    (cap, W)  uint32   packed signatures (bitmap / raw MinHash)
+  pb         (cap,)    int32    cached popcounts (paper §5.2)
+  neighbors  (L+1, cap, M0) int32  padded adjacency, -1 = empty slot
+  node_level (cap,)    int32    -1 = unused slot
+  entry / top_level / count     scalars
+
+Search is the standard greedy-descent + bounded beam, expressed as
+`lax.while_loop` over a fixed-size beam with masked argmin selection. The
+paper's `efSearch` is literally the expansion budget of the loop — matching
+its framing of efSearch as "the number of candidates explored".
+
+The per-hop hot loop — distances from the query to the M0 neighbors of the
+expanded node — is exactly the bitmap-Jaccard XOR+popcount computation that
+kernels/bitmap_jaccard.py tiles for the VPU. Inside the (vmapped) search we
+use the fused jnp form (single-row vs M0 rows is too small for a kernel
+launch per hop); the kernel carries the bulk paths (in-batch dedup, flat
+scoring, distributed shard scan).
+
+Three metrics, selected statically (paper §3.2's three-way comparison):
+  bitmap_jaccard  — FOLD: D = 2 px / (pa + pb + px)
+  minhash_jaccard — FAISS (Jaccard) baseline: D = 1 - mean(lane equality)
+  hamming         — FAISS (Hamming) baseline: D = popcount(xor) / bits
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["HNSWConfig", "HNSWState", "hnsw_init", "hnsw_insert_batch",
+           "hnsw_search", "sample_levels", "METRICS"]
+
+METRICS = ("bitmap_jaccard", "minhash_jaccard", "hamming")
+
+_INF = jnp.float32(jnp.inf)
+
+
+class HNSWConfig(NamedTuple):
+    capacity: int
+    words: int                      # W: packed words per vector
+    M: int = 16                     # max degree, upper layers
+    M0: int = 32                    # max degree, level 0
+    ef_construction: int = 64
+    ef_search: int = 64
+    max_level: int = 4              # levels 0..max_level
+    metric: str = "bitmap_jaccard"
+    # hnswlib-style diverse neighbor selection at insert time: keep a
+    # candidate only if it is closer to the new node than to any already
+    # selected neighbor. Improves recall in duplicate-dense clusters (the
+    # paper's hardest regime) at a small construction cost.
+    select_heuristic: bool = False
+
+    @property
+    def ml(self) -> float:
+        return 1.0 / np.log(max(self.M, 2))
+
+
+class HNSWState(NamedTuple):
+    vectors: jnp.ndarray      # (cap, W) uint32
+    pb: jnp.ndarray           # (cap,) int32 cached popcounts
+    neighbors: jnp.ndarray    # (L+1, cap, M0) int32
+    node_level: jnp.ndarray   # (cap,) int32
+    entry: jnp.ndarray        # () int32
+    top_level: jnp.ndarray    # () int32
+    count: jnp.ndarray        # () int32
+
+
+def hnsw_init(cfg: HNSWConfig) -> HNSWState:
+    cap, W = cfg.capacity, cfg.words
+    return HNSWState(
+        vectors=jnp.zeros((cap, W), jnp.uint32),
+        pb=jnp.zeros((cap,), jnp.int32),
+        neighbors=jnp.full((cfg.max_level + 1, cap, cfg.M0), -1, jnp.int32),
+        node_level=jnp.full((cap,), -1, jnp.int32),
+        entry=jnp.int32(-1),
+        top_level=jnp.int32(-1),
+        count=jnp.int32(0),
+    )
+
+
+def sample_levels(n: int, cfg: HNSWConfig, seed: int = 0) -> np.ndarray:
+    """Geometric level assignment, counter-based (deterministic, resumable)."""
+    idx = np.arange(n, dtype=np.uint64) + np.uint64(seed) * np.uint64(0x9E3779B9)
+    x = idx * np.uint64(0x9E3779B97F4A7C15)
+    x ^= x >> np.uint64(29)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(32)
+    u = (x.astype(np.float64) + 1.0) / 2.0**64
+    lv = np.floor(-np.log(u) * cfg.ml).astype(np.int32)
+    return np.minimum(lv, cfg.max_level)
+
+
+# ----------------------------------------------------------------- distance
+def _dist_rows(cfg: HNSWConfig, q: jnp.ndarray, qpc: jnp.ndarray,
+               vecs: jnp.ndarray, pcs: jnp.ndarray) -> jnp.ndarray:
+    """Distance from one query to a batch of stored rows. (K,) f32."""
+    if cfg.metric == "bitmap_jaccard":
+        px = jnp.sum(jax.lax.population_count(q[None, :] ^ vecs).astype(jnp.int32), -1)
+        denom = qpc + pcs + px
+        return jnp.where(denom > 0,
+                         2.0 * px.astype(jnp.float32) / jnp.maximum(denom, 1),
+                         0.0)
+    if cfg.metric == "minhash_jaccard":
+        return 1.0 - jnp.mean((q[None, :] == vecs).astype(jnp.float32), axis=-1)
+    if cfg.metric == "hamming":
+        bits = jnp.float32(cfg.words * 32)
+        dh = jnp.sum(jax.lax.population_count(q[None, :] ^ vecs).astype(jnp.int32), -1)
+        return dh.astype(jnp.float32) / bits
+    raise ValueError(f"unknown metric {cfg.metric}")
+
+
+def _dist_ids(cfg, state: HNSWState, q, qpc, ids) -> jnp.ndarray:
+    """Masked distance to node ids; id < 0 -> +inf."""
+    safe = jnp.maximum(ids, 0)
+    d = _dist_rows(cfg, q, qpc, state.vectors[safe], state.pb[safe])
+    return jnp.where(ids >= 0, d, _INF)
+
+
+# ------------------------------------------------------------ greedy descent
+def _greedy_step(cfg, state, q, qpc, level: int, cur, curd, max_steps: int = 64):
+    """ef=1 greedy walk at a (static) level: move to closer neighbor while improving."""
+    def cond(c):
+        _, _, improved, steps = c
+        return improved & (steps < max_steps)
+
+    def body(c):
+        cur, curd, _, steps = c
+        nbrs = state.neighbors[level, cur]           # (M0,)
+        d = _dist_ids(cfg, state, q, qpc, nbrs)
+        j = jnp.argmin(d)
+        better = d[j] < curd
+        return (jnp.where(better, nbrs[j], cur),
+                jnp.minimum(curd, d[j]), better, steps + 1)
+
+    cur, curd, _, _ = jax.lax.while_loop(
+        cond, body, (cur, curd, jnp.bool_(True), jnp.int32(0)))
+    return cur, curd
+
+
+# ------------------------------------------------------------- beam search
+def _search_layer(cfg, state, q, qpc, level: int, ef: int,
+                  init_ids, init_dists, visited):
+    """Bounded beam search at one (static) level.
+
+    init_ids/init_dists: (E,) seeds (-1 = empty). Returns beam of size ef
+    (ids, dists) sorted ascending by distance, plus updated visited mask.
+    `ef` doubles as the expansion budget — the paper's efSearch semantics.
+    """
+    E = init_ids.shape[0]
+    pad = ef - E
+    assert pad >= 0, "ef must be >= number of seeds"
+    beam_ids = jnp.concatenate([init_ids, jnp.full((pad,), -1, jnp.int32)])
+    beam_d = jnp.concatenate([init_dists, jnp.full((pad,), jnp.inf, jnp.float32)])
+    expanded = beam_ids < 0  # empty slots can never be selected
+    visited = visited.at[jnp.maximum(init_ids, 0)].set(
+        visited[jnp.maximum(init_ids, 0)] | (init_ids >= 0))
+
+    def cond(c):
+        beam_ids, beam_d, expanded, visited, steps = c
+        return jnp.any(~expanded) & (steps < ef)
+
+    def body(c):
+        beam_ids, beam_d, expanded, visited, steps = c
+        sel = jnp.argmin(jnp.where(expanded, jnp.inf, beam_d))
+        nid = beam_ids[sel]
+        expanded = expanded.at[sel].set(True)
+        nbrs = state.neighbors[level, jnp.maximum(nid, 0)]   # (M0,)
+        safe = jnp.maximum(nbrs, 0)
+        fresh = (nbrs >= 0) & ~visited[safe]
+        visited = visited.at[safe].set(visited[safe] | fresh)
+        d = jnp.where(fresh, _dist_ids(cfg, state, q, qpc, nbrs), jnp.inf)
+        # merge beam with fresh neighbors, keep top-ef by distance
+        cat_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, -1)])
+        cat_d = jnp.concatenate([beam_d, d])
+        cat_exp = jnp.concatenate([expanded, jnp.full(nbrs.shape, False)])
+        neg, idxs = jax.lax.top_k(-cat_d, ef)
+        return (cat_ids[idxs], -neg, cat_exp[idxs] | (cat_ids[idxs] < 0),
+                visited, steps + 1)
+
+    beam_ids, beam_d, _, visited, _ = jax.lax.while_loop(
+        cond, body, (beam_ids, beam_d, expanded, visited, jnp.int32(0)))
+    order = jnp.argsort(beam_d)
+    return beam_ids[order], beam_d[order], visited
+
+
+def _descend(cfg, state, q, qpc, stop_level: jnp.ndarray):
+    """Greedy-descend from the global entry down to stop_level+1 (inclusive)."""
+    cur = jnp.maximum(state.entry, 0)
+    curd = _dist_ids(cfg, state, q, qpc, state.entry[None])[0]
+    for lev in range(cfg.max_level, 0, -1):  # static unroll; level 0 excluded
+        active = (lev <= state.top_level) & (lev > stop_level)
+        nxt, nxtd = _greedy_step(cfg, state, q, qpc, lev, cur, curd)
+        cur = jnp.where(active, nxt, cur)
+        curd = jnp.where(active, nxtd, curd)
+    return cur, curd
+
+
+# ------------------------------------------------------------------- search
+@functools.partial(jax.jit, static_argnames=("cfg", "k", "ef", "query_chunk"))
+def hnsw_search(cfg: HNSWConfig, state: HNSWState, queries: jnp.ndarray,
+                k: int, ef: int | None = None, query_chunk: int = 0):
+    """Batched kNN search.
+
+    queries: (Q, W) uint32. Returns (ids (Q, k) int32, sims (Q, k) f32);
+    missing results have id -1 and sim -inf. Similarity = 1 - distance for
+    all three metrics (each distance is normalized to [0, 1]).
+
+    query_chunk > 0 bounds peak memory: the vmapped search allocates a
+    (Q, capacity) visited mask, which at ingest scale (1e5 queries x 1e6
+    slots) is terabytes; chunking runs lax.map over (Q/chunk) vmapped
+    chunks, so the working set is (chunk, capacity). See EXPERIMENTS.md
+    §Perf (fold_dedup iteration 1).
+    """
+    ef = cfg.ef_search if ef is None else ef
+    qpcs = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), -1)
+
+    def one(q, qpc):
+        visited = jnp.zeros((cfg.capacity,), jnp.bool_)
+        cur, curd = _descend(cfg, state, q, qpc, jnp.int32(0))
+        ids, d, _ = _search_layer(cfg, state, q, qpc, 0, ef,
+                                  cur[None], curd[None], visited)
+        ids, d = ids[:k], d[:k]
+        empty = state.count == 0
+        ids = jnp.where(empty | (ids < 0), -1, ids)
+        sims = jnp.where(ids >= 0, 1.0 - d, -jnp.inf)
+        return ids, sims
+
+    Q = queries.shape[0]
+    if query_chunk and Q > query_chunk:
+        pad = (-Q) % query_chunk
+        qp = jnp.pad(queries, ((0, pad), (0, 0)))
+        pp = jnp.pad(qpcs, (0, pad))
+        n = (Q + pad) // query_chunk
+        qs = qp.reshape(n, query_chunk, -1)
+        ps = pp.reshape(n, query_chunk)
+        ids, sims = jax.lax.map(lambda ab: jax.vmap(one)(ab[0], ab[1]),
+                                (qs, ps))
+        return ids.reshape(-1, k)[:Q], sims.reshape(-1, k)[:Q]
+    return jax.vmap(one)(queries, qpcs)
+
+
+# ------------------------------------------------------------------- insert
+def _select_diverse(cfg, state, cand_ids, cand_d, m_l: int):
+    """hnswlib neighbor-selection heuristic over distance-sorted candidates:
+    candidate c survives iff d(c, q) < min_{s in selected} d(c, s).
+
+    cand_ids/cand_d: (E,) sorted ascending, -1/-inf padded. Returns (E,)
+    ids with non-selected slots set to -1 (selected count <= m_l).
+    """
+    E = cand_ids.shape[0]
+    safe = jnp.maximum(cand_ids, 0)
+    vecs = state.vectors[safe]
+    pcs = state.pb[safe]
+    # pairwise candidate-candidate distances (E x E); rows for invalid ids
+    # are never consulted (their selection is masked out below)
+    cc = jax.vmap(lambda v, p: _dist_rows(cfg, v, p, vecs, pcs))(vecs, pcs)
+
+    def body(i, carry):
+        selected, count = carry
+        cand_ok = (cand_ids[i] >= 0) & (count < m_l)
+        # distance to the closest already-selected neighbor
+        dsel = jnp.min(jnp.where(selected, cc[i], jnp.inf))
+        diverse = cand_d[i] < dsel
+        take = cand_ok & diverse
+        return selected.at[i].set(take), count + take.astype(jnp.int32)
+
+    selected, _ = jax.lax.fori_loop(
+        0, E, body, (jnp.zeros((E,), jnp.bool_), jnp.int32(0)))
+    return jnp.where(selected, cand_ids, -1)
+
+
+def _prune_row(cfg, state, node, level: int, cand_ids, cand_d, m_l: int):
+    """Write node's adjacency row at `level`: keep the m_l closest candidates
+    (or the diverse subset when select_heuristic is on)."""
+    if cfg.select_heuristic:
+        div_ids = _select_diverse(cfg, state, cand_ids, cand_d, m_l)
+        div_d = jnp.where(div_ids >= 0, cand_d, jnp.inf)
+        neg, idxs = jax.lax.top_k(-div_d, cfg.M0)
+        keep_ids = jnp.where(jnp.isfinite(-neg), div_ids[idxs], -1)
+        return state._replace(
+            neighbors=state.neighbors.at[level, node].set(keep_ids))
+    neg, idxs = jax.lax.top_k(-cand_d, cfg.M0)
+    keep_ids = cand_ids[idxs]
+    keep_d = -neg
+    slot = jnp.arange(cfg.M0)
+    keep_ids = jnp.where((slot < m_l) & jnp.isfinite(keep_d), keep_ids, -1)
+    return state._replace(
+        neighbors=state.neighbors.at[level, node].set(keep_ids))
+
+
+def _link_back(cfg, state, new_id, level: int, sel_ids, m_l: int):
+    """Add new_id into each selected neighbor's row, pruning to m_l closest."""
+    def one(st, nb):
+        def do(st):
+            row = st.neighbors[level, nb]                    # (M0,)
+            nbv = st.vectors[nb]
+            nbpc = st.pb[nb]
+            cand_ids = jnp.concatenate([row, new_id[None]])
+            d = _dist_ids(cfg, st, nbv, nbpc, cand_ids)
+            neg, idxs = jax.lax.top_k(-d, cfg.M0)
+            keep = cand_ids[idxs]
+            keep = jnp.where((jnp.arange(cfg.M0) < m_l) & jnp.isfinite(-neg),
+                             keep, -1)
+            return st._replace(neighbors=st.neighbors.at[level, nb].set(keep))
+        return jax.lax.cond(nb >= 0, do, lambda s: s, st), None
+
+    state, _ = jax.lax.scan(one, state, sel_ids)
+    return state
+
+
+def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
+    """Insert a single vector with a pre-sampled level. Pure function."""
+    idx = state.count
+    state = state._replace(
+        vectors=state.vectors.at[idx].set(vec),
+        pb=state.pb.at[idx].set(pc),
+        node_level=state.node_level.at[idx].set(level),
+        count=state.count + 1,
+    )
+
+    def first(state):
+        return state._replace(entry=idx, top_level=level)
+
+    def connect(state):
+        cur, curd = _descend(cfg, state, vec, pc, level)
+        top = state.top_level  # frozen for this insert
+        carry = (state, cur[None], curd[None])
+        for lev in range(cfg.max_level, -1, -1):  # static unroll
+            m_l = cfg.M0 if lev == 0 else cfg.M
+
+            def do(carry, lev=lev, m_l=m_l):
+                st, s_ids, s_d = carry
+                visited = jnp.zeros((cfg.capacity,), jnp.bool_)
+                cand_ids, cand_d, _ = _search_layer(
+                    cfg, st, vec, pc, lev, cfg.ef_construction,
+                    s_ids, s_d, visited)
+                sel = jnp.where(jnp.arange(cfg.ef_construction) < m_l,
+                                cand_ids, -1)
+                st = _prune_row(cfg, st, idx, lev, cand_ids, cand_d, m_l)
+                st = _link_back(cfg, st, idx, lev, sel, m_l)
+                # seed the next level down with the best candidate found here
+                return (st, cand_ids[:1], cand_d[:1])
+
+            active = lev <= jnp.minimum(level, top)
+            carry = jax.lax.cond(active, do, lambda c: c, carry)
+        state = carry[0]
+        # raise entry point if the new node's level exceeds the current top
+        higher = level > top
+        return state._replace(
+            entry=jnp.where(higher, idx, state.entry),
+            top_level=jnp.maximum(top, level))
+
+    return jax.lax.cond(state.entry < 0, first, connect, state)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
+                      pcs: jnp.ndarray, levels: jnp.ndarray,
+                      mask: jnp.ndarray) -> HNSWState:
+    """Sequentially insert a batch (deterministic order). mask=False skips.
+
+    vecs: (B, W) uint32; pcs: (B,) int32; levels: (B,) int32 (pre-sampled);
+    mask: (B,) bool — only True rows are inserted (duplicates stay out).
+    """
+    def body(i, st):
+        def do(st):
+            return _insert_one(cfg, st, vecs[i], pcs[i], levels[i])
+        full = st.count >= cfg.capacity
+        return jax.lax.cond(mask[i] & ~full, do, lambda s: s, st)
+
+    return jax.lax.fori_loop(0, vecs.shape[0], body, state)

@@ -1,0 +1,49 @@
+"""MinHash signature generation (step 2 of Fig. 1).
+
+For each of H seeded hash functions, the signature lane is the minimum hash
+over all valid shingles: sig[h] = min_j F_h(shingle_j). Padded shingle slots
+carry UINT32_MAX (from shingle.py) and we additionally re-mask after the
+per-function remix, because fmix32(UINT32_MAX ^ seed) is not MAX.
+
+The paper uses H = 112 hash functions (as in IBM DPK); the JAX path computes
+all H lanes for all shingles in one vectorized (H, B, L) pass. The Pallas
+kernel in repro/kernels/minhash.py implements the same reduction with
+explicit VMEM tiling; ref() here is its oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import UINT32_MAX, hash_seeds, multihash
+from repro.core.shingle import shingle_hashes
+
+__all__ = ["minhash_from_shingles", "minhash_signatures", "default_seeds"]
+
+DEFAULT_NUM_HASHES = 112
+
+
+def default_seeds(num_hashes: int = DEFAULT_NUM_HASHES) -> jnp.ndarray:
+    return hash_seeds(num_hashes)
+
+
+def minhash_from_shingles(sh: jnp.ndarray, seeds: jnp.ndarray) -> jnp.ndarray:
+    """sh: (B, L) uint32 shingle hashes (UINT32_MAX = invalid); seeds: (H,).
+
+    returns (B, H) uint32 MinHash signatures.
+    """
+    valid = sh != UINT32_MAX  # (B, L)
+    hashed = multihash(sh, seeds)  # (H, B, L)
+    hashed = jnp.where(valid[None], hashed, UINT32_MAX)
+    return jnp.min(hashed, axis=-1).T  # (B, H)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def minhash_signatures(
+    tokens: jnp.ndarray, lengths: jnp.ndarray, seeds: jnp.ndarray, n: int = 5
+) -> jnp.ndarray:
+    """End-to-end: padded token ids -> (B, H) MinHash signatures."""
+    sh = shingle_hashes(tokens, lengths, n)
+    return minhash_from_shingles(sh, seeds)

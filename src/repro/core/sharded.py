@@ -1,0 +1,123 @@
+"""Distributed FOLD: index-sharded dedup via shard_map (the 1000+-node path).
+
+The paper runs FOLD on one big-memory VM. To scale corpus construction to a
+pod (and beyond), FOLD-TPU shards the HNSW index across the mesh `data`
+axis: every device owns an independent HNSW sub-graph over 1/N of the
+admitted corpus. Per incoming batch:
+
+  1. each host contributes its local query shard; queries are all-gathered
+     (signatures are tiny: 512 B/doc — gathering 100K docs is 51 MB);
+  2. every device searches its local sub-graph for ALL queries (bounded
+     beam, local compute — this is where the paper's bitmap kernel runs);
+  3. per-query top-k results are merged across shards with an all-gather +
+     top-k (k and nshards are small, the merge is negligible);
+  4. documents that survive the threshold are assigned to a shard by
+     round-robin over their batch index and inserted locally.
+
+Recall property: searching N sub-graphs of size C/N and merging top-k is
+*at least* as accurate as one size-C graph search with the same ef (each
+sub-search explores ef nodes of a smaller graph), so distribution does not
+trade recall — it adds it. Throughput: per-device search cost drops with
+corpus shard size; query fan-out is the cost, hidden by batching.
+
+Used by launch/dryrun.py as the paper-technique dry-run cell, lowering the
+whole step (gather -> HNSW while_loops -> merge -> insert) on the 16x16 and
+2x16x16 meshes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_init,
+                             hnsw_insert_batch, hnsw_search)
+from repro.core.dedup import _greedy_leader
+from repro.kernels import ref as kref
+
+__all__ = ["sharded_init", "make_sharded_dedup_step", "sharded_state_specs"]
+
+
+def sharded_init(cfg: HNSWConfig, mesh: Mesh, axis: str = "data") -> HNSWState:
+    """Stacked per-shard states with a leading device axis (sharded)."""
+    n = mesh.shape[axis]
+    one = hnsw_init(cfg)
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
+    specs = sharded_state_specs(mesh, axis)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), stacked, specs)
+
+
+def sharded_state_specs(mesh: Mesh, axis: str = "data"):
+    """NamedShardings for the stacked HNSWState."""
+    def spec(x=None):
+        return NamedSharding(mesh, P(axis))
+    return HNSWState(vectors=spec(), pb=spec(), neighbors=spec(),
+                     node_level=spec(), entry=spec(), top_level=spec(),
+                     count=spec())
+
+
+def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
+                            k: int = 4, axis: str = "data",
+                            query_chunk: int = 0, sub_batches: int = 1):
+    """Returns jit-able `step(states, bitmaps, pcs, levels) -> (states, keep)`.
+
+    bitmaps (B, W) sharded over `axis` on the batch dim; states stacked
+    (nshards, ...) sharded on the leading dim. keep (B,) replicated.
+
+    sub_batches > 1 splits the gathered batch into sequential slices (the
+    paper's Fig. 9 protocol: 100K streaming docs processed in 10K batches):
+    slice j is deduped against the index that already contains slices < j,
+    bounding the quadratic in-batch work and the search working set.
+    query_chunk bounds the (chunk, capacity) visited masks of the batched
+    HNSW search (see EXPERIMENTS.md §Perf).
+    """
+    nshards = mesh.shape[axis]
+
+    def one_sub(state, my, q, pc, lv):
+        B = q.shape[0]
+        # (2) in-batch dedup — block-chunked pairwise (no (B,B,W) temp)
+        from repro.core.bitmap import chunked_pairwise_bitmap_jaccard
+        sim_in = chunked_pairwise_bitmap_jaccard(q, q, pc, pc)
+        keep_in = _greedy_leader(sim_in, tau)
+        # (3) local sub-graph search for all queries
+        ids, sims = hnsw_search(cfg, state, q, k=k, query_chunk=query_chunk)
+        # (4) merge top-k across shards: max similarity is all we need
+        best = jnp.max(jnp.where(ids >= 0, sims, -jnp.inf), axis=-1)
+        best_global = jax.lax.pmax(best, axis)
+        keep = keep_in & (best_global < tau)
+        # (5) round-robin shard assignment for admitted docs
+        mine = (jnp.arange(B, dtype=jnp.int32) % nshards) == my
+        state = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine)
+        return state, keep
+
+    def local(state, bitmaps, pcs, levels):
+        # shard_map keeps a size-1 leading block axis; drop it per device
+        state = jax.tree.map(lambda x: x[0], state)
+        my = jax.lax.axis_index(axis)
+        # (1) gather the full query batch (signatures are small)
+        q_all = jax.lax.all_gather(bitmaps, axis, tiled=True)   # (B, W)
+        pc_all = jax.lax.all_gather(pcs, axis, tiled=True)
+        lv_all = jax.lax.all_gather(levels, axis, tiled=True)
+        B = q_all.shape[0]
+        if sub_batches > 1 and B % sub_batches == 0:
+            sb = B // sub_batches
+            keeps = []
+            for j in range(sub_batches):  # sequential: slice j sees j' < j
+                sl = slice(j * sb, (j + 1) * sb)
+                state, kj = one_sub(state, my, q_all[sl], pc_all[sl],
+                                    lv_all[sl])
+                keeps.append(kj)
+            keep = jnp.concatenate(keeps)
+        else:
+            state, keep = one_sub(state, my, q_all, pc_all, lv_all)
+        return jax.tree.map(lambda x: x[None], state), keep
+
+    step = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(HNSWState(*(P(axis),) * 7), P(axis), P(axis), P(axis)),
+        out_specs=(HNSWState(*(P(axis),) * 7), P()),
+        check_vma=False)
+    return step

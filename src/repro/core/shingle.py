@@ -1,0 +1,52 @@
+"""Shingling: documents -> overlapping n-gram hashes (step 1 of Fig. 1).
+
+Documents arrive as padded token-id matrices (B, L) uint32 with a per-doc
+valid length. A shingle at position i is the n-gram tokens[i : i+n]; we hash
+it with a polynomial roll (uint32 wraparound) followed by a murmur finisher,
+so shingle identity == n-gram identity with overwhelming probability.
+
+Shingle positions i >= len - n + 1 are masked to UINT32_MAX so downstream
+min-reductions (MinHash) ignore them. Documents shorter than n contribute a
+single whole-document shingle (degenerate but well-defined), matching common
+dedup-pipeline behaviour for tiny documents.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import UINT32_MAX, fmix32
+
+__all__ = ["shingle_hashes", "num_shingles"]
+
+_POLY = jnp.uint32(0x01000193)  # FNV prime; any odd multiplier works
+
+
+def num_shingles(lengths: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Number of valid shingles per document: max(len - n + 1, min(len, 1))."""
+    lengths = lengths.astype(jnp.int32)
+    return jnp.where(lengths >= n, lengths - n + 1, jnp.minimum(lengths, 1))
+
+
+def shingle_hashes(tokens: jnp.ndarray, lengths: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Hash every overlapping n-gram.
+
+    tokens:  (B, L) uint32 padded token ids
+    lengths: (B,)   int32 valid lengths
+    n:       shingle width in tokens (static)
+
+    returns (B, L) uint32 — position i holds hash(tokens[i:i+n]); invalid
+    positions (beyond the shingle count) hold UINT32_MAX.
+    """
+    tokens = tokens.astype(jnp.uint32)
+    B, L = tokens.shape
+    # Polynomial hash over the window: h_i = sum_k t[i+k] * POLY^(n-1-k),
+    # computed with shifted views. Out-of-range shifts read padded garbage
+    # but those positions are masked below.
+    h = jnp.zeros((B, L), dtype=jnp.uint32)
+    for k in range(n):
+        shifted = jnp.roll(tokens, -k, axis=1)
+        h = h * _POLY + shifted + jnp.uint32(1)  # +1 so token id 0 contributes
+    h = fmix32(h)
+
+    valid = jnp.arange(L, dtype=jnp.int32)[None, :] < num_shingles(lengths, n)[:, None]
+    return jnp.where(valid, h, UINT32_MAX)

@@ -1,0 +1,6 @@
+from repro.data.corpus import CorpusConfig, SyntheticCorpus, DATASET_PRESETS
+from repro.data.tokenizer import HashWordTokenizer
+from repro.data.ingest import DedupIngest, PackedBatches
+
+__all__ = ["CorpusConfig", "SyntheticCorpus", "DATASET_PRESETS",
+           "HashWordTokenizer", "DedupIngest", "PackedBatches"]

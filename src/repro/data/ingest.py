@@ -1,0 +1,93 @@
+"""FOLD-integrated training ingestion: the paper's technique as a
+first-class data-pipeline stage.
+
+DedupIngest wraps any batch source (tokens, lengths) with a FoldPipeline:
+incoming documents are deduplicated online and only admitted documents flow
+into training. PackedBatches then packs admitted documents into fixed-shape
+(batch, seq_len) training batches with next-token labels — the bridge
+between the evolving corpus and the static-shape training step.
+
+For multi-host training each host runs its own ingest shard (documents are
+pre-sharded by hash); see launch/train.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dedup import FoldConfig, FoldPipeline
+
+__all__ = ["DedupIngest", "PackedBatches"]
+
+
+class DedupIngest:
+    def __init__(self, source, fold_cfg: FoldConfig | None = None):
+        self.source = source
+        self.pipe = FoldPipeline(fold_cfg or FoldConfig())
+        self.total_in = 0
+        self.total_admitted = 0
+
+    def next_clean_batch(self, batch_size: int):
+        """Pull one raw batch, dedup it, return admitted (tokens, lengths)."""
+        tokens, lengths, _ = self.source.next_batch(batch_size)
+        keep, stats = self.pipe.process_batch(tokens, lengths)
+        self.total_in += len(keep)
+        self.total_admitted += int(keep.sum())
+        return tokens[keep], lengths[keep], stats
+
+
+class PackedBatches:
+    """Greedy sequence packing of admitted docs into (B, S) training batches.
+
+    Documents are concatenated with an EOS separator; sequences are filled
+    greedily and a new doc always starts within the sequence (no doc spans
+    two sequences — simpler loss masking, negligible waste at our lengths).
+    """
+
+    def __init__(self, batch: int, seq_len: int, eos_id: int = 1,
+                 pad_id: int = 0):
+        self.batch = batch
+        self.seq_len = seq_len
+        self.eos = eos_id
+        self.pad = pad_id
+        self._open: list[np.ndarray] = []     # current partially-filled seqs
+        self._ready: list[np.ndarray] = []
+
+    def add_docs(self, tokens: np.ndarray, lengths: np.ndarray):
+        for row, ln in zip(tokens, lengths):
+            doc = np.concatenate([row[:ln].astype(np.int32), [self.eos]])
+            doc = doc[: self.seq_len]
+            placed = False
+            for i, seq in enumerate(self._open):
+                if len(seq) + len(doc) <= self.seq_len:
+                    self._open[i] = np.concatenate([seq, doc])
+                    placed = True
+                    break
+            if not placed:
+                self._open.append(doc)
+            # promote full-enough sequences
+            self._open, full = (
+                [s for s in self._open if len(s) < self.seq_len],
+                [s for s in self._open if len(s) >= self.seq_len])
+            self._ready.extend(full)
+
+    def pop_batch(self):
+        """Return (tokens (B,S) int32, loss_mask (B,S) f32) or None."""
+        if len(self._ready) < self.batch:
+            return None
+        rows = self._ready[: self.batch]
+        self._ready = self._ready[self.batch:]
+        out = np.full((self.batch, self.seq_len), self.pad, np.int32)
+        mask = np.zeros((self.batch, self.seq_len), np.float32)
+        for i, seq in enumerate(rows):
+            seq = seq[: self.seq_len]
+            out[i, :len(seq)] = seq
+            mask[i, :len(seq)] = 1.0
+        return out, mask
+
+    def flush_batch(self):
+        """Like pop_batch but pads with open sequences when short."""
+        self._ready.extend(self._open)
+        self._open = []
+        while len(self._ready) < self.batch:
+            self._ready.append(np.asarray([self.eos], np.int32))
+        return self.pop_batch()

@@ -1,0 +1,52 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+`use_kernel` selects the Pallas path ('SIMD' in the paper's ablation, Fig. 8)
+vs the pure-jnp oracle; `interpret` runs the kernel body in Python on CPU.
+On this CPU container the default is interpret=True; on a real TPU runtime
+set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) for compiled Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitmap_jaccard import bitmap_jaccard_matrix, hamming_matrix
+from repro.kernels.minhash import minhash_kernel_signatures
+
+__all__ = ["bitmap_jaccard", "hamming", "minhash", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def bitmap_jaccard(qs: jnp.ndarray, db: jnp.ndarray,
+                   pq: jnp.ndarray | None = None,
+                   pb: jnp.ndarray | None = None,
+                   *, cached: bool = True, use_kernel: bool = True,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """(Q, W) x (N, W) packed bitmaps -> (Q, N) f32 similarity matrix."""
+    if not use_kernel:
+        if not cached:
+            pq = pb = None  # force on-the-fly popcounts (ablation arm)
+        return ref.bitmap_jaccard_ref(qs, db, pq, pb)
+    itp = default_interpret() if interpret is None else interpret
+    return bitmap_jaccard_matrix(qs, db, pq, pb, cached=cached, interpret=itp)
+
+
+def hamming(qs: jnp.ndarray, db: jnp.ndarray, *, use_kernel: bool = True,
+            interpret: bool | None = None) -> jnp.ndarray:
+    if not use_kernel:
+        return ref.hamming_ref(qs, db)
+    itp = default_interpret() if interpret is None else interpret
+    return hamming_matrix(qs, db, interpret=itp)
+
+
+def minhash(shingles: jnp.ndarray, seeds: jnp.ndarray, *,
+            use_kernel: bool = True, interpret: bool | None = None) -> jnp.ndarray:
+    if not use_kernel:
+        return ref.minhash_ref(shingles, seeds)
+    itp = default_interpret() if interpret is None else interpret
+    return minhash_kernel_signatures(shingles, seeds, interpret=itp)

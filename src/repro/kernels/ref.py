@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification: tests sweep shapes/dtypes and
+assert_allclose(kernel(interpret=True), ref(...)). No tiling, no VMEM logic —
+just the math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import UINT32_MAX, fmix32, multihash
+
+__all__ = [
+    "bitmap_jaccard_ref",
+    "hamming_ref",
+    "minhash_ref",
+]
+
+
+def _popcount(words: jnp.ndarray, axis=-1) -> jnp.ndarray:
+    return jnp.sum(jax.lax.population_count(words).astype(jnp.int32), axis=axis)
+
+
+def bitmap_jaccard_ref(qs: jnp.ndarray, db: jnp.ndarray,
+                       pq: jnp.ndarray | None = None,
+                       pb: jnp.ndarray | None = None) -> jnp.ndarray:
+    """(Q, W) x (N, W) packed uint32 -> (Q, N) f32 bitmap-Jaccard similarity.
+
+    J = (pa + pb - px) / (pa + pb + px), empty-vs-empty -> 1.0.
+    pq/pb: optional cached popcounts (paper §5.2); recomputed if None.
+    """
+    qs = qs.astype(jnp.uint32)
+    db = db.astype(jnp.uint32)
+    if pq is None:
+        pq = _popcount(qs)
+    if pb is None:
+        pb = _popcount(db)
+    px = _popcount(qs[:, None, :] ^ db[None, :, :])
+    union2 = (pq[:, None] + pb[None, :] + px).astype(jnp.float32)
+    inter2 = (pq[:, None] + pb[None, :] - px).astype(jnp.float32)
+    return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1.0), 1.0)
+
+
+def hamming_ref(qs: jnp.ndarray, db: jnp.ndarray) -> jnp.ndarray:
+    """(Q, W) x (N, W) packed uint32 -> (Q, N) f32 normalized Hamming sim."""
+    bits = jnp.float32(qs.shape[-1] * 32)
+    dh = _popcount(qs[:, None, :].astype(jnp.uint32) ^ db[None, :, :].astype(jnp.uint32))
+    return 1.0 - dh.astype(jnp.float32) / bits
+
+
+def minhash_ref(shingles: jnp.ndarray, seeds: jnp.ndarray) -> jnp.ndarray:
+    """(B, L) uint32 shingle hashes (UINT32_MAX = pad) x (H,) seeds
+    -> (B, H) uint32 MinHash signatures: sig[b, h] = min_l F_h(sh[b, l])."""
+    valid = shingles != UINT32_MAX
+    hashed = multihash(shingles, seeds)  # (H, B, L)
+    hashed = jnp.where(valid[None], hashed, UINT32_MAX)
+    return jnp.min(hashed, axis=-1).T

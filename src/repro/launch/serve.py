@@ -1,0 +1,97 @@
+"""Serving driver: batched greedy decoding with a KV cache.
+
+Exercises the decode path of any architecture (the decode_32k / long_500k
+cells' serve_step) with real token streams: prefill via teacher-forced
+forward filling the cache, then step-wise batched generation.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch falcon-mamba-7b \
+      --batch 4 --prompt-len 32 --gen 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.common import init_params, tree_size
+from repro.train.step import make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--cache-len", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else reduced_config(args.arch)
+    smax = args.cache_len or (args.prompt_len + args.gen)
+    B = args.batch
+    rng = np.random.default_rng(0)
+
+    if cfg.family == "encdec":
+        params = init_params(W.whisper_param_specs(cfg), jax.random.PRNGKey(0))
+        caches = W.whisper_init_caches(cfg, B, smax)
+        # prefill cross-attention caches from the (stub) encoder output
+        frames = jnp.asarray(rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)),
+                             jnp.float32)
+        enc = W.whisper_encode(cfg, params, frames)
+        H, hd = cfg.n_heads, cfg.hd
+        ck, cv = [], []
+        for l in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[l], params["dec"])
+            hk = W.layer_norm(enc, p["x_ln_w"], p["x_ln_b"])
+            ck.append((hk @ p["x_wk"].astype(hk.dtype)).reshape(B, -1, H, hd))
+            cv.append((hk @ p["x_wv"].astype(hk.dtype)
+                       + p["x_bv"].astype(hk.dtype)).reshape(B, -1, H, hd))
+        caches = dict(caches,
+                      cross_k=jnp.stack(ck).astype(caches["cross_k"].dtype),
+                      cross_v=jnp.stack(cv).astype(caches["cross_v"].dtype))
+    else:
+        params = init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+        caches = T.init_caches(cfg, B, smax)
+    print(f"arch={cfg.name} params={tree_size(params)/1e6:.1f}M cache_len={smax}")
+
+    decode = jax.jit(make_decode_step(cfg))
+    prompts = rng.integers(1, cfg.vocab, (B, args.prompt_len))
+
+    # prefill by stepping the decoder over the prompt (cache-filling path)
+    t0 = time.time()
+    tok = jnp.asarray(prompts[:, 0], jnp.int32)
+    for t in range(args.prompt_len):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, caches = decode(params, caches, tok, pos)
+        tok = (jnp.asarray(prompts[:, t + 1], jnp.int32)
+               if t + 1 < args.prompt_len else jnp.argmax(logits, -1).astype(jnp.int32))
+    logits.block_until_ready()
+    t_pre = time.time() - t0
+
+    generated = [np.asarray(tok)]
+    t0 = time.time()
+    for t in range(args.prompt_len, args.prompt_len + args.gen - 1):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, caches = decode(params, caches, tok, pos)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        generated.append(np.asarray(tok))
+    logits.block_until_ready()
+    t_gen = time.time() - t0
+    steps = args.gen - 1
+    print(f"prefill {args.prompt_len} steps: {t_pre:.2f}s | "
+          f"decode {steps} steps: {t_gen:.2f}s "
+          f"({B*steps/max(t_gen,1e-9):.1f} tok/s batched)")
+    out = np.stack(generated, 1)
+    assert np.isfinite(out).all() or out.dtype.kind == "i"
+    print("sample tokens:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig
+from repro.models.common import (ParamSpec, init_params, abstract_params,
+                                 param_pspecs, tree_size)

@@ -1,0 +1,111 @@
+"""Param-spec substrate: logical-axis-annotated parameters.
+
+Every parameter is declared as a ParamSpec with *logical* axis names
+(("layers", "embed", "mlp"), ("vocab", "embed"), ...). Three consumers:
+
+  init_params(specs, key)      -> concrete array pytree (smoke tests, examples)
+  abstract_params(specs)       -> ShapeDtypeStruct pytree (dry-run: no alloc)
+  param_pspecs(specs, rules)   -> PartitionSpec pytree (pjit shardings)
+
+The rules table maps logical axis -> mesh axis (or None). Sharding presets
+live in repro/dist/sharding.py. This is the same design MaxText/levanter use,
+boiled down to what this framework needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "param_pspecs",
+           "tree_size", "cast_tree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical names, len == ndim
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float | None = None            # stddev override
+    fan_in_axes: tuple[int, ...] = ()     # dims counted as fan-in for scaling
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.scale is not None:
+        std = spec.scale
+    elif spec.fan_in_axes:
+        fan_in = math.prod(spec.shape[a] for a in spec.fan_in_axes)
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+    else:
+        std = 0.02
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key) -> Any:
+    """Materialize a ParamSpec tree into concrete arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_leaf_init(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs) -> Any:
+    """ShapeDtypeStruct tree — what the dry-run lowers against."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=_is_spec)
+
+
+def param_pspecs(specs, rules: dict[str, str | tuple | None]) -> Any:
+    """Logical axes -> PartitionSpec via the rules table.
+
+    A rule value may be a mesh axis name, a tuple of mesh axes, or None.
+    Unlisted logical axes are unsharded. Mesh axes already used by an earlier
+    dim of the same param are dropped (PartitionSpec must not repeat axes).
+    """
+    def one(s: ParamSpec):
+        used: set[str] = set()
+        parts = []
+        for name in s.axes:
+            rule = rules.get(name) if name is not None else None
+            if rule is None:
+                parts.append(None)
+                continue
+            axes = rule if isinstance(rule, tuple) else (rule,)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+                used.add(axes[0])
+            else:
+                parts.append(axes)
+                used.update(axes)
+        return P(*parts)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def tree_size(tree) -> int:
+    """Total element count (params) of an array/ShapeDtypeStruct tree."""
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,416 @@
+"""Model building blocks (pure JAX, all functional).
+
+Conventions:
+  activations (B, S, D); attention heads (B, S, H, dh); KV caches
+  (B, Smax, Hkv, dh). All matmuls run in the compute dtype (bf16 on TPU),
+  softmax/normalizers accumulate in f32.
+
+Attention is *chunked* (flash-style online softmax via lax.scan over KV
+chunks, outer scan over Q chunks) so prefill_32k/train_4k never materialize
+(S, S) logits. Decode uses direct einsum over the cache (q_len = 1, memory
+O(S)) which GSPMD can shard along the sequence axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "chunked_attention", "decode_attention",
+    "mlp_swiglu", "mlp_gelu", "moe_ffn", "mamba1_scan", "mamba2_ssd",
+]
+
+_NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding, half-split convention. x: (..., S, H, dh),
+    positions: (..., S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half) broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ attention
+def chunked_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                      q_chunk: int = 512, kv_chunk: int = 512):
+    """Flash-style attention. q (B,S,H,dh); k,v (B,T,Hkv,dh); GQA via
+    head-group reshape. Returns (B, S, H, dh).
+
+    Memory is O(q_chunk * kv_chunk) per block; the online softmax carries
+    (m, l, acc) across KV chunks in f32.
+    """
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    S_real, T_real = S, T
+    # pad ragged sequence lengths up to the chunk grid (e.g. whisper's 1500
+    # encoder frames); padded KV positions are masked out, padded Q rows are
+    # sliced off the output.
+    if S % q_chunk or T % kv_chunk:
+        pS = (-S) % q_chunk
+        pT = (-T) % kv_chunk
+        q = jnp.pad(q, ((0, 0), (0, pS), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pT), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pT), (0, 0), (0, 0)))
+        S, T = S + pS, T + pT
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = dh ** -0.5
+
+    qc = q.reshape(B, nq, q_chunk, Hkv, rep, dh)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, dh)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, dh)
+    q_pos = jnp.arange(S, dtype=jnp.int32).reshape(nq, q_chunk)
+    k_pos = jnp.arange(T, dtype=jnp.int32).reshape(nk, kv_chunk)
+
+    # ---- windowed fast path (local attention, e.g. gemma3 5:1 layers) ----
+    # A q-chunk with window w only sees keys in [qpos0 - w + 1, qpos0 + cq),
+    # i.e. a fixed-size span gathered with a dynamic_slice — O(S * w) work
+    # instead of the masked O(S * T) scan (16x fewer FLOPs at 32k/w=1024).
+    span = q_chunk + (window or 0) - 1
+    n_blk = (span + kv_chunk - 1) // kv_chunk + 1
+    if window is not None and causal and n_blk < nk:
+        kv_span = n_blk * kv_chunk
+
+        @jax.checkpoint
+        def q_block_local(_, qi_and_pos):
+            qi, qpos = qi_and_pos
+            start = jnp.clip((qpos[0] - window + 1) // kv_chunk, 0,
+                             nk - n_blk) * kv_chunk
+            kj = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (B, kv_span, Hkv, dh))
+            vj = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (B, kv_span, Hkv, dh))
+            kpos = start + jnp.arange(kv_span, dtype=jnp.int32)
+            logits = jnp.einsum("bqhrd,bkhd->bhrqk", qi, kj,
+                                preferred_element_type=jnp.float32) * scale
+            allow = (kpos[None, :] < T_real) \
+                & (kpos[None, :] <= qpos[:, None]) \
+                & ((qpos[:, None] - kpos[None, :]) < window)
+            logits = jnp.where(allow[None, None, None], logits, _NEG_INF)
+            m = logits.max(-1)
+            p = jnp.exp(logits - m[..., None])
+            l = jnp.maximum(p.sum(-1), 1e-30)
+            out = jnp.einsum("bhrqk,bkhd->bhrqd",
+                             (p / l[..., None]).astype(vj.dtype), vj,
+                             preferred_element_type=jnp.float32)
+            return None, out.astype(qi.dtype).transpose(0, 3, 1, 2, 4)
+
+        _, blocks = jax.lax.scan(q_block_local, None,
+                                 (qc.transpose(1, 0, 2, 3, 4, 5), q_pos))
+        out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, dh)
+        return out[:, :S_real]
+
+    @jax.checkpoint
+    def q_block(_, qi_and_pos):
+        # checkpointed: the backward recomputes the inner KV scan instead of
+        # saving an (nq, nk, cq, ck) probability tensor — i.e. the full S^2
+        # attention matrix. This is the flash-attention backward policy.
+        qi, qpos = qi_and_pos  # (B, cq, Hkv, rep, dh), (cq,)
+
+        def kv_step(carry, kv_and_pos):
+            m, l, acc = carry
+            kj, vj, kpos = kv_and_pos
+            logits = jnp.einsum("bqhrd,bkhd->bhrqk", qi, kj,
+                                preferred_element_type=jnp.float32) * scale
+            allow = jnp.broadcast_to(kpos[None, :] < T_real,
+                                     (q_chunk, kv_chunk))
+            if causal:
+                allow &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                allow &= (qpos[:, None] - kpos[None, :]) < window
+            logits = jnp.where(allow[None, None, None], logits, _NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, rep, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), k_pos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # cast back to the compute dtype HERE: the stacked q-block outputs
+        # cross the scan boundary (and any resharding) — leaving them f32
+        # doubles the saved-activation bytes and the wire of any AR on them
+        out = out.astype(qi.dtype)
+        # (B,Hkv,rep,cq,dh) -> (B,cq,Hkv,rep,dh)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, blocks = jax.lax.scan(q_block, None,
+                             (qc.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    # blocks: (nq, B, cq, Hkv, rep, dh)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, dh)
+    return out[:, :S_real]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None):
+    """Single-token attention over a KV cache.
+
+    q (B, H, dh); caches (B, Smax, Hkv, dh); pos (B,) int32 = index of the
+    current token (cache already updated at pos). Sequence axis stays an
+    einsum dim so GSPMD can shard it (sequence parallelism for long_500k).
+    """
+    B, Smax, Hkv, dh = k_cache.shape
+    H = q.shape[1]
+    rep = H // Hkv
+    scale = dh ** -0.5
+    qr = q.reshape(B, Hkv, rep, dh)
+    logits = jnp.einsum("bhrd,bshd->bhrs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(Smax, dtype=jnp.int32)
+    allow = idx[None, :] <= pos[:, None]
+    if window is not None:
+        allow &= (pos[:, None] - idx[None, :]) < window
+    logits = jnp.where(allow[:, None, None, :], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrs,bshd->bhrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------------ MLPs
+def mlp_swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def mlp_gelu(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu(x @ w_up + b_up, approximate=True)
+    return h @ w_down + b_down
+
+
+# ------------------------------------------------------------------ MoE
+def moe_ffn(x, w_router, w_gate, w_up, w_down, *, topk: int,
+            capacity_factor: float = 1.25):
+    """Top-k MoE with *per-row* sort-based dispatch (GShard-style capacity).
+
+    x (B,S,D); w_router (D,E); w_gate/w_up (E,D,F); w_down (E,F,D).
+
+    Routing, sorting and capacity assignment happen independently per batch
+    row (vmap over B). This is the distribution-critical design decision:
+    the batch dim is data-sharded, so routing involves NO cross-shard
+    collectives — the only communication is the einsum against
+    expert-sharded weights (the EP all-to-all equivalent), which GSPMD
+    schedules. Per-row capacity C = ceil(S*k/E * cf), rounded up to 8;
+    overflow tokens are dropped (residual passes them through), standard
+    GShard semantics. For decode, callers pass x as (1, B, D) so routing
+    happens across the whole decode batch.
+    """
+    B, S, D = x.shape
+    E = w_router.shape[1]
+    C = int(np.ceil(S * topk / E * capacity_factor / 8.0) * 8)
+    C = min(max(C, 8), S * topk)
+
+    def route_row(xr):
+        """xr (S, D) -> dispatched buffer + combine metadata."""
+        logits = (xr @ w_router.astype(xr.dtype)).astype(jnp.float32)
+        gate_vals, gate_idx = jax.lax.top_k(logits, topk)        # (S, k)
+        probs = jax.nn.softmax(gate_vals, axis=-1)
+        flat_e = gate_idx.reshape(-1)                            # (S*k,)
+        flat_w = probs.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(S, dtype=jnp.int32), topk)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        # position within expert group = index - first occurrence of expert
+        first = jnp.searchsorted(se, se, side="left")
+        pos_in_e = jnp.arange(S * topk, dtype=jnp.int32) - first.astype(jnp.int32)
+        keep = pos_in_e < C
+        dest = jnp.where(keep, se * C + pos_in_e, E * C)
+        buf = jnp.zeros((E * C + 1, D), xr.dtype).at[dest].set(xr[st])
+        return buf[:-1].reshape(E, C, D), (st, sw, dest, keep)
+
+    h, (st, sw, dest, keep) = jax.vmap(route_row)(x)             # (B,E,C,D)
+
+    # NOTE (refuted §Perf hypothesis): f-chunking the expert FFN via a
+    # reshape of the f-sharded weights breaks GSPMD propagation (the chunked
+    # reshape crosses the shard boundary), triggering full weight gathers —
+    # measured 6.6x MORE wire and 3x temp on grok. Keep the single einsums;
+    # the (B,E,C,f) peak is bounded by capacity_factor instead.
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", h, w_gate.astype(x.dtype)))
+    u = jnp.einsum("becd,edf->becf", h, w_up.astype(x.dtype))
+    y = jnp.einsum("becf,efd->becd", g * u, w_down.astype(x.dtype))
+
+    def combine_row(yr, st_r, sw_r, dest_r, keep_r):
+        # combine in the compute dtype: an f32 accumulator here forces every
+        # backward cotangent through the expert FFN into f32, doubling the
+        # MoE's buffer+wire bytes (topk<=8 adds per slot — bf16 is plenty)
+        rows = yr.reshape(E * C, D)
+        gathered = jnp.where(keep_r[:, None],
+                             rows[jnp.minimum(dest_r, E * C - 1)], 0.0)
+        out = jnp.zeros((S, D), x.dtype)
+        return out.at[st_r].add(gathered * sw_r[:, None].astype(x.dtype))
+
+    out = jax.vmap(combine_row)(y, st, sw, dest, keep)
+    return out.reshape(B, S, D)
+
+
+# ------------------------------------------------------------------ Mamba 1
+def mamba1_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 256, h0=None):
+    """Selective scan (Mamba 1), chunked.
+
+    x  (B, S, d_in)      per-channel input
+    dt (B, S, d_in)      softplus'd step sizes
+    A  (d_in, N)         negative real (from -exp(A_log))
+    Bm (B, S, N), Cm (B, S, N)
+    D  (d_in,)
+    h0 optional (B, d_in, N) initial state.
+    Returns (y (B, S, d_in), h_last (B, d_in, N)).
+
+    Within a chunk: associative scan over t of the affine recurrence
+    h_t = a_t * h_{t-1} + b_t with a = exp(dt*A), b = dt*B*x; across chunks
+    a sequential lax.scan carries the (B, d_in, N) state — memory stays
+    O(B * chunk * d_in * N).
+    """
+    B, S, d_in = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xr = x.reshape(B, nc, chunk, d_in)
+    dtr = dt.reshape(B, nc, chunk, d_in)
+    Br = Bm.reshape(B, nc, chunk, N)
+    Cr = Cm.reshape(B, nc, chunk, N)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_in, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B, c, d_in), (B, c, d_in), (B, c, N) x2
+        dA = jnp.exp(dtc.astype(jnp.float32)[..., None] * A)          # (B,c,d,N)
+        dBx = (dtc.astype(jnp.float32) * xc.astype(jnp.float32))[..., None] \
+            * Bc.astype(jnp.float32)[:, :, None, :]                   # (B,c,d,N)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = aa * h[:, None] + bb                                     # (B,c,d,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Cc.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xr.transpose(1, 0, 2, 3), dtr.transpose(1, 0, 2, 3),
+         Br.transpose(1, 0, 2, 3), Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, d_in)
+    y = y + x.astype(jnp.float32) * D
+    return y.astype(x.dtype), h_last
+
+
+def mamba1_step(h, x, dt, A, Bm, Cm, D):
+    """Single-token recurrence. h (B,d,N); x,dt (B,d); Bm,Cm (B,N)."""
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    dBx = (dt * x).astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[:, None, :]
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32)) + x.astype(jnp.float32) * D
+    return h, y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ Mamba 2
+def _segsum(dA):
+    """(..., c) -> (..., c, c) lower-triangular cumulative sums:
+    out[i, j] = sum_{j < t <= i} dA[t], -inf above diagonal."""
+    c = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j<t<=i}
+    i = jnp.arange(c)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_ssd(x, dt, A, Bm, Cm, D, *, chunk: int = 256, h0=None):
+    """Mamba-2 SSD (state-space dual), chunked matmul form.
+
+    x  (B, S, H, P)   heads x headdim
+    dt (B, S, H)      positive step sizes
+    A  (H,)           negative scalars
+    Bm (B, S, N), Cm (B, S, N)   (single group, broadcast over heads)
+    D  (H,)
+    Returns (y (B, S, H, P), state (B, H, N, P)).
+    """
+    B, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xr = x.reshape(B, nc, chunk, H, Pd).astype(jnp.float32)
+    dtr = dt.reshape(B, nc, chunk, H).astype(jnp.float32)
+    Br = Bm.reshape(B, nc, chunk, N).astype(jnp.float32)
+    Cr = Cm.reshape(B, nc, chunk, N).astype(jnp.float32)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, dtc, Bc, Cc = inp    # (B,c,H,P) (B,c,H) (B,c,N) (B,c,N)
+        dA = dtc * A             # (B,c,H)
+        seg = _segsum(dA.transpose(0, 2, 1))            # (B,H,c,c)
+        L = jnp.exp(seg)
+        G = jnp.einsum("bin,bjn->bij", Cc, Bc)          # (B,c,c)
+        M = G[:, None] * L                              # (B,H,c,c)
+        y_diag = jnp.einsum("bhij,bjh,bjhp->bihp", M, dtc, xc)
+        # decay from chunk start to each position / to chunk end
+        cs = jnp.cumsum(dA, axis=1)                     # (B,c,H)
+        decay_in = jnp.exp(cs)                          # exp(sum_{t<=i} dA)
+        y_off = jnp.einsum("bin,bih,bhnp->bihp", Cc, decay_in, state)
+        total = cs[:, -1, :]                            # (B,H)
+        decay_out = jnp.exp(total[:, None, :] - cs)     # exp(sum_{t>j} dA)
+        s_new = jnp.einsum("bjn,bjh,bjhp->bhnp", Bc, decay_out * dtc, xc)
+        state = jnp.exp(total)[..., None, None] * state + s_new
+        return state, y_diag + y_off
+
+    state, ys = jax.lax.scan(
+        chunk_step, h0,
+        (xr.transpose(1, 0, 2, 3, 4), dtr.transpose(1, 0, 2, 3),
+         Br.transpose(1, 0, 2, 3), Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Pd)
+    y = y + x.astype(jnp.float32) * D[:, None]
+    return y.astype(x.dtype), state
+
+
+def mamba2_step(state, x, dt, A, Bm, Cm, D):
+    """Single-token SSD recurrence. state (B,H,N,P); x (B,H,P); dt (B,H);
+    Bm, Cm (B,N)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A)            # (B,H)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bm.astype(jnp.float32),
+                     dt.astype(jnp.float32), x.astype(jnp.float32))
+    state = dA[..., None, None] * state + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), state)
+    y = y + x.astype(jnp.float32) * D[:, None]
+    return state, y.astype(x.dtype)

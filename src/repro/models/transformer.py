@@ -1,0 +1,478 @@
+"""Decoder-LM forward/decode for all non-encdec families.
+
+Layers are executed as scans over *groups* (see ModelConfig.layer_plan).
+Params are stacked along a leading "layers" axis per group position; the
+whole stack lowers once per distinct block kind regardless of depth — this
+is what keeps 94-layer MoE dry-runs compilable.
+
+Public API:
+  param_specs(cfg)                          -> ParamSpec tree
+  lm_forward(cfg, params, tokens, ...)      -> logits (B, S, V)
+  init_caches(cfg, batch, smax)             -> cache tree (abstract-friendly)
+  lm_decode_step(cfg, params, caches, token, pos) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import act
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+from repro.models.layers import (chunked_attention, decode_attention,
+                                 layer_norm, mamba1_scan, mamba1_step,
+                                 mamba2_ssd, mamba2_step, mlp_gelu,
+                                 mlp_swiglu, moe_ffn, rms_norm, rope)
+
+__all__ = ["param_specs", "lm_forward", "lm_decode_step", "init_caches"]
+
+
+# ===================================================================== specs
+def _attn_specs(cfg: ModelConfig, stack: tuple[int, ...], moe: bool) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    L = ("layers",) * len(stack)
+    pdt = cfg.pdt
+    s: dict[str, ParamSpec] = {
+        "ln1": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+        "wq": ParamSpec(stack + (d, H * hd), L + ("embed", "heads"),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wk": ParamSpec(stack + (d, Hkv * hd), L + ("embed", "kv_heads"),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wv": ParamSpec(stack + (d, Hkv * hd), L + ("embed", "kv_heads"),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wo": ParamSpec(stack + (H * hd, d), L + ("heads", "embed"),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "ln2": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec(stack + (H * hd,), L + ("heads",), init="zeros", dtype=pdt)
+        s["bk"] = ParamSpec(stack + (Hkv * hd,), L + ("kv_heads",), init="zeros", dtype=pdt)
+        s["bv"] = ParamSpec(stack + (Hkv * hd,), L + ("kv_heads",), init="zeros", dtype=pdt)
+    if moe:
+        E, f = cfg.n_experts, (cfg.moe_d_ff or cfg.d_ff)
+        s["router"] = ParamSpec(stack + (d, E), L + ("embed", None),
+                                fan_in_axes=(len(stack),), dtype=jnp.float32)
+        s["we_gate"] = ParamSpec(stack + (E, d, f), L + ("expert", "embed", "mlp"),
+                                 fan_in_axes=(len(stack) + 1,), dtype=pdt)
+        s["we_up"] = ParamSpec(stack + (E, d, f), L + ("expert", "embed", "mlp"),
+                               fan_in_axes=(len(stack) + 1,), dtype=pdt)
+        s["we_down"] = ParamSpec(stack + (E, f, d), L + ("expert", "mlp", "embed"),
+                                 fan_in_axes=(len(stack) + 1,), dtype=pdt)
+    elif cfg.act == "swiglu":
+        ff = cfg.d_ff
+        s["w_gate"] = ParamSpec(stack + (d, ff), L + ("embed", "mlp"),
+                                fan_in_axes=(len(stack),), dtype=pdt)
+        s["w_up"] = ParamSpec(stack + (d, ff), L + ("embed", "mlp"),
+                              fan_in_axes=(len(stack),), dtype=pdt)
+        s["w_down"] = ParamSpec(stack + (ff, d), L + ("mlp", "embed"),
+                                fan_in_axes=(len(stack),), dtype=pdt)
+    else:
+        ff = cfg.d_ff
+        s["w_up"] = ParamSpec(stack + (d, ff), L + ("embed", "mlp"),
+                              fan_in_axes=(len(stack),), dtype=pdt)
+        s["b_up"] = ParamSpec(stack + (ff,), L + ("mlp",), init="zeros", dtype=pdt)
+        s["w_down"] = ParamSpec(stack + (ff, d), L + ("mlp", "embed"),
+                                fan_in_axes=(len(stack),), dtype=pdt)
+        s["b_down"] = ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt)
+    return s
+
+
+def _mamba1_specs(cfg: ModelConfig, stack: tuple[int, ...]) -> dict:
+    d, di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    L = ("layers",) * len(stack)
+    pdt = cfg.pdt
+    return {
+        "ln": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+        "in_proj": ParamSpec(stack + (d, 2 * di), L + ("embed", "ssm_inner"),
+                             fan_in_axes=(len(stack),), dtype=pdt),
+        "conv_w": ParamSpec(stack + (cfg.ssm_conv, di), L + (None, "ssm_inner"),
+                            scale=0.3, dtype=pdt),
+        "conv_b": ParamSpec(stack + (di,), L + ("ssm_inner",), init="zeros", dtype=pdt),
+        "x_proj": ParamSpec(stack + (di, R + 2 * N), L + ("ssm_inner", None),
+                            fan_in_axes=(len(stack),), dtype=pdt),
+        "dt_proj": ParamSpec(stack + (R, di), L + (None, "ssm_inner"),
+                             fan_in_axes=(len(stack),), dtype=pdt),
+        "dt_bias": ParamSpec(stack + (di,), L + ("ssm_inner",), init="zeros", dtype=pdt),
+        "A_log": ParamSpec(stack + (di, N), L + ("ssm_inner", None),
+                           init="zeros", dtype=jnp.float32),
+        "Dp": ParamSpec(stack + (di,), L + ("ssm_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamSpec(stack + (di, d), L + ("ssm_inner", "embed"),
+                              fan_in_axes=(len(stack),), dtype=pdt),
+    }
+
+
+def _mamba2_specs(cfg: ModelConfig, stack: tuple[int, ...]) -> dict:
+    d, di, N, Hm = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.mamba_heads
+    L = ("layers",) * len(stack)
+    pdt = cfg.pdt
+    return {
+        "ln": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+        "wz": ParamSpec(stack + (d, di), L + ("embed", "ssm_inner"),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wx": ParamSpec(stack + (d, di), L + ("embed", "ssm_inner"),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wB": ParamSpec(stack + (d, N), L + ("embed", None),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wC": ParamSpec(stack + (d, N), L + ("embed", None),
+                        fan_in_axes=(len(stack),), dtype=pdt),
+        "wdt": ParamSpec(stack + (d, Hm), L + ("embed", None),
+                         fan_in_axes=(len(stack),), dtype=pdt),
+        "dt_bias": ParamSpec(stack + (Hm,), L + (None,), init="zeros", dtype=jnp.float32),
+        "conv_w": ParamSpec(stack + (cfg.ssm_conv, di), L + (None, "ssm_inner"),
+                            scale=0.3, dtype=pdt),
+        "conv_b": ParamSpec(stack + (di,), L + ("ssm_inner",), init="zeros", dtype=pdt),
+        "A_log": ParamSpec(stack + (Hm,), L + (None,), init="zeros", dtype=jnp.float32),
+        "Dp": ParamSpec(stack + (Hm,), L + (None,), init="ones", dtype=jnp.float32),
+        "gn": ParamSpec(stack + (di,), L + ("ssm_inner",), init="zeros", dtype=pdt),
+        "out_proj": ParamSpec(stack + (di, d), L + ("ssm_inner", "embed"),
+                              fan_in_axes=(len(stack),), dtype=pdt),
+    }
+
+
+def _block_specs(cfg: ModelConfig, kind: str, stack: tuple[int, ...]) -> dict:
+    if kind in ("global", "local"):
+        return _attn_specs(cfg, stack, moe=False)
+    if kind == "moe":
+        return _attn_specs(cfg, stack, moe=True)
+    if kind == "mamba1":
+        return _mamba1_specs(cfg, stack)
+    if kind == "mamba2":
+        return _mamba2_specs(cfg, stack)
+    raise ValueError(kind)
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    pattern, n_groups, rem = cfg.layer_plan()
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), dtype=cfg.pdt),
+        "final_norm": ParamSpec((d,), ("embed",), init="zeros", dtype=cfg.pdt),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"),
+                                     fan_in_axes=(0,), dtype=cfg.pdt)
+    body_pattern = [k for k in pattern if k != "shared_attn"]
+    if n_groups:
+        specs["groups"] = {f"p{i}": _block_specs(cfg, k, (n_groups,))
+                           for i, k in enumerate(body_pattern)}
+    if rem:
+        # remainder layers: stacked with a unit leading axis for uniformity
+        specs["rem"] = {f"p{i}": _block_specs(cfg, k, (1,))
+                        for i, k in enumerate(rem)}
+    if cfg.family == "hybrid":
+        specs["shared_attn"] = _attn_specs(cfg, (), moe=False)
+    return specs
+
+
+# ===================================================================== blocks
+def _norm(cfg, x, w, b=None):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, w + 1.0, b if b is not None else jnp.zeros_like(w))
+    return rms_norm(x, w)
+
+
+def _causal_conv(x, conv_w, conv_b):
+    """Depthwise causal conv over sequence. x (B,S,di); conv_w (K, di)."""
+    K = conv_w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        shift = K - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xs.astype(jnp.float32) * conv_w[k].astype(jnp.float32)
+    return (out + conv_b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _attn_block(cfg: ModelConfig, p, x, positions, *, window, moe: bool):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = _norm(cfg, x, p["ln1"])
+    q = h @ p["wq"].astype(h.dtype)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(B, S, Hkv, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, Hkv, hd)
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    # explicit cast: keeps the TP partial-sum all-reduce of the residual in
+    # the compute dtype (a stray f32 here doubles every activation AR)
+    x = x + (o.reshape(B, S, H * hd) @ p["wo"].astype(h.dtype)).astype(x.dtype)
+
+    h2 = _norm(cfg, x, p["ln2"])
+    if moe:
+        f = moe_ffn(h2, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+                    topk=cfg.topk, capacity_factor=cfg.capacity_factor)
+    elif cfg.act == "swiglu":
+        f = mlp_swiglu(h2, p["w_gate"].astype(h2.dtype),
+                       p["w_up"].astype(h2.dtype), p["w_down"].astype(h2.dtype))
+    else:
+        f = mlp_gelu(h2, p["w_up"].astype(h2.dtype), p["b_up"].astype(h2.dtype),
+                     p["w_down"].astype(h2.dtype), p["b_down"].astype(h2.dtype))
+    return x + f.astype(x.dtype)
+
+
+def _mamba1_block(cfg: ModelConfig, p, x):
+    B, S, d = x.shape
+    di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    h = _norm(cfg, x, p["ln"])
+    xz = h @ p["in_proj"].astype(h.dtype)
+    xp, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xp, p["conv_w"], p["conv_b"]))
+    proj = xc @ p["x_proj"].astype(h.dtype)
+    dt_raw, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(h.dtype)
+                         + p["dt_bias"].astype(h.dtype))
+    A = -jnp.exp(p["A_log"])
+    y, _ = mamba1_scan(xc, dt, A, Bm, Cm, p["Dp"], chunk=cfg.q_chunk)
+    y = y * jax.nn.silu(z)
+    return x + y @ p["out_proj"].astype(h.dtype)
+
+
+def _mamba2_block(cfg: ModelConfig, p, x):
+    B, S, d = x.shape
+    di, N, Hm, Pd = cfg.d_inner, cfg.ssm_state, cfg.mamba_heads, cfg.mamba_headdim
+    h = _norm(cfg, x, p["ln"])
+    z = h @ p["wz"].astype(h.dtype)
+    xp = jax.nn.silu(_causal_conv(h @ p["wx"].astype(h.dtype),
+                                  p["conv_w"], p["conv_b"]))
+    Bm = h @ p["wB"].astype(h.dtype)
+    Cm = h @ p["wC"].astype(h.dtype)
+    dt = jax.nn.softplus((h @ p["wdt"].astype(h.dtype)).astype(jnp.float32)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = mamba2_ssd(xp.reshape(B, S, Hm, Pd), dt, A, Bm, Cm, p["Dp"],
+                      chunk=cfg.q_chunk)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gn"])
+    return x + y @ p["out_proj"].astype(h.dtype)
+
+
+def _apply_block(cfg, kind, p, x, positions, shared=None):
+    if kind == "global":
+        return _attn_block(cfg, p, x, positions, window=None, moe=False)
+    if kind == "local":
+        return _attn_block(cfg, p, x, positions, window=cfg.window_size, moe=False)
+    if kind == "moe":
+        return _attn_block(cfg, p, x, positions, window=None, moe=True)
+    if kind == "mamba1":
+        return _mamba1_block(cfg, p, x)
+    if kind == "mamba2":
+        return _mamba2_block(cfg, p, x)
+    raise ValueError(kind)
+
+
+# ===================================================================== forward
+def lm_forward(cfg: ModelConfig, params, tokens, *, prefix_embeds=None,
+               remat: bool = True):
+    """tokens (B, S_text) int32; prefix_embeds optional (B, P, d) for VLM.
+    Returns logits (B, S, vocab) in f32."""
+    x = act.btd(params["embed"].astype(cfg.cdt)[tokens])
+    if prefix_embeds is not None:
+        x = act.btd(jnp.concatenate([prefix_embeds.astype(cfg.cdt), x], axis=1))
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    pattern, n_groups, rem = cfg.layer_plan()
+    body_pattern = [k for k in pattern if k != "shared_attn"]
+    has_shared = cfg.family == "hybrid"
+
+    def group_body(x, gp):
+        for i, kind in enumerate(body_pattern):
+            x = act.btd(_apply_block(cfg, kind, gp[f"p{i}"], x, positions))
+        if has_shared:
+            x = act.btd(_attn_block(cfg, params["shared_attn"], x, positions,
+                                    window=None, moe=False))
+        return x, None
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    if n_groups:
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    for i, kind in enumerate(rem):
+        p = jax.tree.map(lambda a: a[0], params["rem"][f"p{i}"])
+        x = _apply_block(cfg, kind, p, x, positions)
+
+    x = _norm(cfg, x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return act.logits_spec((x @ head.astype(x.dtype)).astype(jnp.float32))
+
+
+# ===================================================================== decode
+def _cache_spec(cfg: ModelConfig, kind: str, stack, batch: int, smax: int):
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    if kind in ("global", "local", "moe", "shared_attn"):
+        return {
+            "k": jnp.zeros(stack + (batch, smax, Hkv, hd), cfg.cdt),
+            "v": jnp.zeros(stack + (batch, smax, Hkv, hd), cfg.cdt),
+        }
+    if kind == "mamba1":
+        return {
+            "ssm": jnp.zeros(stack + (batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros(stack + (batch, cfg.ssm_conv - 1, cfg.d_inner), cfg.cdt),
+        }
+    if kind == "mamba2":
+        return {
+            "ssm": jnp.zeros(stack + (batch, cfg.mamba_heads, cfg.ssm_state,
+                                      cfg.mamba_headdim), jnp.float32),
+            "conv": jnp.zeros(stack + (batch, cfg.ssm_conv - 1, cfg.d_inner), cfg.cdt),
+        }
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, smax: int) -> dict:
+    pattern, n_groups, rem = cfg.layer_plan()
+    body_pattern = [k for k in pattern if k != "shared_attn"]
+    caches: dict[str, Any] = {}
+    if n_groups:
+        caches["groups"] = {f"p{i}": _cache_spec(cfg, k, (n_groups,), batch, smax)
+                            for i, k in enumerate(body_pattern)}
+        if cfg.family == "hybrid":
+            caches["groups"]["shared"] = _cache_spec(
+                cfg, "shared_attn", (n_groups,), batch, smax)
+    if rem:
+        caches["rem"] = {f"p{i}": _cache_spec(cfg, k, (1,), batch, smax)
+                         for i, k in enumerate(rem)}
+    return caches
+
+
+def _attn_decode(cfg, p, x, cache, pos, *, window, moe: bool):
+    """x (B, d) single token; cache {k,v} (B, smax, Hkv, hd); pos (B,)."""
+    B, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = _norm(cfg, x[:, None, :], p["ln1"])[:, 0]
+    q = h @ p["wq"].astype(h.dtype)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q, k, v = (q + p["bq"].astype(h.dtype), k + p["bk"].astype(h.dtype),
+                   v + p["bv"].astype(h.dtype))
+    pos1 = pos[:, None]
+    q = rope(q.reshape(B, 1, H, hd), pos1, cfg.rope_theta)[:, 0]
+    k = rope(k.reshape(B, 1, Hkv, hd), pos1, cfg.rope_theta)[:, 0]
+    v = v.reshape(B, Hkv, hd)
+    bidx = jnp.arange(B)
+    kc = cache["k"].at[bidx, pos].set(k.astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, pos].set(v.astype(cache["v"].dtype))
+    o = decode_attention(q, kc, vc, pos, window=window)
+    x = x + o.reshape(B, H * hd) @ p["wo"].astype(h.dtype)
+
+    h2 = _norm(cfg, x[:, None, :], p["ln2"])[:, 0]
+    if moe:
+        # decode: route across the whole batch as one row (see moe_ffn doc)
+        f = moe_ffn(h2[None, :, :], p["router"], p["we_gate"], p["we_up"],
+                    p["we_down"], topk=cfg.topk,
+                    capacity_factor=cfg.capacity_factor)[0]
+    elif cfg.act == "swiglu":
+        f = mlp_swiglu(h2, p["w_gate"].astype(h2.dtype),
+                       p["w_up"].astype(h2.dtype), p["w_down"].astype(h2.dtype))
+    else:
+        f = mlp_gelu(h2, p["w_up"].astype(h2.dtype), p["b_up"].astype(h2.dtype),
+                     p["w_down"].astype(h2.dtype), p["b_down"].astype(h2.dtype))
+    return x + f, {"k": kc, "v": vc}
+
+
+def _mamba1_decode(cfg, p, x, cache):
+    B, d = x.shape
+    N, R = cfg.ssm_state, cfg.dt_rank
+    h = _norm(cfg, x[:, None, :], p["ln"])[:, 0]
+    xz = h @ p["in_proj"].astype(h.dtype)
+    xp, z = jnp.split(xz, 2, axis=-1)
+    # conv cache: (B, K-1, di) previous inputs
+    K = cfg.ssm_conv
+    conv = cache["conv"]
+    full = jnp.concatenate([conv, xp[:, None, :]], axis=1)  # (B, K, di)
+    xc = jnp.einsum("bkd,kd->bd", full.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(h.dtype)
+    proj = xc @ p["x_proj"].astype(h.dtype)
+    dt_raw, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(h.dtype)
+                         + p["dt_bias"].astype(h.dtype))
+    A = -jnp.exp(p["A_log"])
+    ssm, y = mamba1_step(cache["ssm"], xc, dt, A, Bm, Cm, p["Dp"])
+    y = y * jax.nn.silu(z)
+    x = x + y @ p["out_proj"].astype(h.dtype)
+    return x, {"ssm": ssm, "conv": full[:, 1:]}
+
+
+def _mamba2_decode(cfg, p, x, cache):
+    B, d = x.shape
+    N, Hm, Pd = cfg.ssm_state, cfg.mamba_heads, cfg.mamba_headdim
+    h = _norm(cfg, x[:, None, :], p["ln"])[:, 0]
+    z = h @ p["wz"].astype(h.dtype)
+    xp_raw = h @ p["wx"].astype(h.dtype)
+    full = jnp.concatenate([cache["conv"], xp_raw[:, None, :]], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", full.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xp = jax.nn.silu(xc).astype(h.dtype)
+    Bm = h @ p["wB"].astype(h.dtype)
+    Cm = h @ p["wC"].astype(h.dtype)
+    dt = jax.nn.softplus((h @ p["wdt"].astype(h.dtype)).astype(jnp.float32)
+                         + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm, y = mamba2_step(cache["ssm"], xp.reshape(B, Hm, Pd), dt, A, Bm, Cm,
+                         p["Dp"])
+    y = y.reshape(B, cfg.d_inner)
+    y = rms_norm((y * jax.nn.silu(z))[:, None, :], p["gn"])[:, 0]
+    x = x + y @ p["out_proj"].astype(h.dtype)
+    return x, {"ssm": ssm, "conv": full[:, 1:]}
+
+
+def _decode_block(cfg, kind, p, x, cache, pos):
+    if kind == "global":
+        return _attn_decode(cfg, p, x, cache, pos, window=None, moe=False)
+    if kind == "local":
+        return _attn_decode(cfg, p, x, cache, pos, window=cfg.window_size, moe=False)
+    if kind == "moe":
+        return _attn_decode(cfg, p, x, cache, pos, window=None, moe=True)
+    if kind == "mamba1":
+        return _mamba1_decode(cfg, p, x, cache)
+    if kind == "mamba2":
+        return _mamba2_decode(cfg, p, x, cache)
+    raise ValueError(kind)
+
+
+def lm_decode_step(cfg: ModelConfig, params, caches, token, pos):
+    """One decode step. token (B,) int32; pos (B,) int32 (current index).
+    Returns (logits (B, vocab) f32, new_caches)."""
+    x = act.bd(params["embed"].astype(cfg.cdt)[token])
+    pattern, n_groups, rem = cfg.layer_plan()
+    body_pattern = [k for k in pattern if k != "shared_attn"]
+    has_shared = cfg.family == "hybrid"
+
+    if n_groups:
+        def body(x, gp_and_cache):
+            gp, gc = gp_and_cache
+            new_c = {}
+            for i, kind in enumerate(body_pattern):
+                x, new_c[f"p{i}"] = _decode_block(cfg, kind, gp[f"p{i}"], x,
+                                                  gc[f"p{i}"], pos)
+                x = act.bd(x)
+            if has_shared:
+                x, new_c["shared"] = _attn_decode(
+                    cfg, params["shared_attn"], x, gc["shared"], pos,
+                    window=None, moe=False)
+            return x, new_c
+
+        x, new_groups = jax.lax.scan(body, x, (params["groups"],
+                                               caches["groups"]))
+        caches = dict(caches)
+        caches["groups"] = new_groups
+    for i, kind in enumerate(rem):
+        p = jax.tree.map(lambda a: a[0], params["rem"][f"p{i}"])
+        c = jax.tree.map(lambda a: a[0], caches["rem"][f"p{i}"])
+        x, c_new = _decode_block(cfg, kind, p, x, c, pos)
+        caches = dict(caches)
+        caches["rem"] = dict(caches["rem"])
+        caches["rem"][f"p{i}"] = jax.tree.map(lambda a: a[None], c_new)
+
+    x = _norm(cfg, x[:, None, :], params["final_norm"])[:, 0]
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x @ head.astype(x.dtype)).astype(jnp.float32), caches

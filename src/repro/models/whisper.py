@@ -1,0 +1,202 @@
+"""Whisper-family encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: `input_specs()` feeds
+precomputed frame embeddings (B, T_enc, d) straight into the encoder (the
+two conv layers that produce them in real Whisper are out of scope).
+
+Encoder: bidirectional pre-LN transformer (layernorm + GELU, sinusoidal
+positions). Decoder: causal self-attention + cross-attention to the encoder
+output + GELU MLP, learned positions. Decode path caches self-attn KV per
+step and cross-attn KV once (computed from the encoder output at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import act
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+from repro.models.layers import chunked_attention, decode_attention, layer_norm
+
+__all__ = ["whisper_param_specs", "whisper_forward", "whisper_init_caches",
+           "whisper_decode_step", "whisper_encode"]
+
+
+def _sinusoids(length: int, d: int):
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / (half - 1)))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def _attn_specs(cfg: ModelConfig, stack, cross: bool) -> dict:
+    d, hd, H = cfg.d_model, cfg.hd, cfg.n_heads
+    L = ("layers",) * len(stack)
+    pdt = cfg.pdt
+    pre = "x" if cross else "s"
+    return {
+        f"{pre}_ln_w": ParamSpec(stack + (d,), L + ("embed",), init="ones", dtype=pdt),
+        f"{pre}_ln_b": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+        f"{pre}_wq": ParamSpec(stack + (d, H * hd), L + ("embed", "heads"),
+                               fan_in_axes=(len(stack),), dtype=pdt),
+        f"{pre}_wk": ParamSpec(stack + (d, H * hd), L + ("embed", "heads"),
+                               fan_in_axes=(len(stack),), dtype=pdt),
+        f"{pre}_wv": ParamSpec(stack + (d, H * hd), L + ("embed", "heads"),
+                               fan_in_axes=(len(stack),), dtype=pdt),
+        f"{pre}_bq": ParamSpec(stack + (H * hd,), L + ("heads",), init="zeros", dtype=pdt),
+        f"{pre}_bv": ParamSpec(stack + (H * hd,), L + ("heads",), init="zeros", dtype=pdt),
+        f"{pre}_wo": ParamSpec(stack + (H * hd, d), L + ("heads", "embed"),
+                               fan_in_axes=(len(stack),), dtype=pdt),
+        f"{pre}_bo": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, stack) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    L = ("layers",) * len(stack)
+    pdt = cfg.pdt
+    return {
+        "m_ln_w": ParamSpec(stack + (d,), L + ("embed",), init="ones", dtype=pdt),
+        "m_ln_b": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+        "w_up": ParamSpec(stack + (d, ff), L + ("embed", "mlp"),
+                          fan_in_axes=(len(stack),), dtype=pdt),
+        "b_up": ParamSpec(stack + (ff,), L + ("mlp",), init="zeros", dtype=pdt),
+        "w_down": ParamSpec(stack + (ff, d), L + ("mlp", "embed"),
+                            fan_in_axes=(len(stack),), dtype=pdt),
+        "b_down": ParamSpec(stack + (d,), L + ("embed",), init="zeros", dtype=pdt),
+    }
+
+
+def whisper_param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    Le, Ld = cfg.encoder_layers, cfg.n_layers
+    pdt = cfg.pdt
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), dtype=pdt),
+        # learned decoder positions; sized for the largest decode shape
+        # (real whisper caps at 448 — the assignment's decode_32k stresses it)
+        "pos_dec": ParamSpec((32768, d), (None, "embed"), scale=0.01, dtype=pdt),
+        "enc": {**_attn_specs(cfg, (Le,), cross=False), **_mlp_specs(cfg, (Le,))},
+        "enc_ln_w": ParamSpec((d,), ("embed",), init="ones", dtype=pdt),
+        "enc_ln_b": ParamSpec((d,), ("embed",), init="zeros", dtype=pdt),
+        "dec": {**_attn_specs(cfg, (Ld,), cross=False),
+                **_attn_specs(cfg, (Ld,), cross=True),
+                **_mlp_specs(cfg, (Ld,))},
+        "dec_ln_w": ParamSpec((d,), ("embed",), init="ones", dtype=pdt),
+        "dec_ln_b": ParamSpec((d,), ("embed",), init="zeros", dtype=pdt),
+    }
+
+
+def _mha(cfg, x, kv, p, pre, *, causal):
+    """Pre-LN multi-head attention (full MHA, biases per Whisper)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = layer_norm(x, p[f"{pre}_ln_w"], p[f"{pre}_ln_b"])
+    hk = layer_norm(kv, p[f"{pre}_ln_w"], p[f"{pre}_ln_b"]) if kv is not x else h
+    q = (h @ p[f"{pre}_wq"].astype(h.dtype) + p[f"{pre}_bq"].astype(h.dtype))
+    k = hk @ p[f"{pre}_wk"].astype(h.dtype)
+    v = (hk @ p[f"{pre}_wv"].astype(h.dtype) + p[f"{pre}_bv"].astype(h.dtype))
+    T = kv.shape[1]
+    o = chunked_attention(q.reshape(B, S, H, hd), k.reshape(B, T, H, hd),
+                          v.reshape(B, T, H, hd), causal=causal,
+                          q_chunk=min(cfg.q_chunk, S), kv_chunk=min(cfg.kv_chunk, T))
+    return x + (o.reshape(B, S, H * hd) @ p[f"{pre}_wo"].astype(h.dtype)
+                + p[f"{pre}_bo"].astype(h.dtype))
+
+
+def _mlp(cfg, x, p):
+    h = layer_norm(x, p["m_ln_w"], p["m_ln_b"])
+    h = jax.nn.gelu(h @ p["w_up"].astype(h.dtype) + p["b_up"].astype(h.dtype),
+                    approximate=True)
+    return x + (h @ p["w_down"].astype(h.dtype) + p["b_down"].astype(h.dtype))
+
+
+def whisper_encode(cfg: ModelConfig, params, frames):
+    """frames (B, T_enc, d) precomputed frame embeddings (conv stub)."""
+    x = act.btd(frames.astype(cfg.cdt) + _sinusoids(frames.shape[1],
+                                                    cfg.d_model).astype(cfg.cdt))
+
+    def body(x, p):
+        x = _mha(cfg, x, x, p, "s", causal=False)
+        x = act.btd(_mlp(cfg, x, p))
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return layer_norm(x, params["enc_ln_w"], params["enc_ln_b"])
+
+
+def whisper_forward(cfg: ModelConfig, params, frames, tokens,
+                    *, remat: bool = True):
+    """Teacher-forced training forward. Returns logits (B, S_dec, vocab)."""
+    enc = whisper_encode(cfg, params, frames)
+    B, S = tokens.shape
+    x = act.btd(params["embed"].astype(cfg.cdt)[tokens]
+                + params["pos_dec"][:S].astype(cfg.cdt))
+
+    def body(x, p):
+        x = _mha(cfg, x, x, p, "s", causal=True)
+        x = _mha(cfg, x, enc, p, "x", causal=False)
+        x = act.btd(_mlp(cfg, x, p))
+        return x, None
+
+    body = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = layer_norm(x, params["dec_ln_w"], params["dec_ln_b"])
+    return act.logits_spec(
+        (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32))
+
+
+def whisper_init_caches(cfg: ModelConfig, batch: int, smax: int):
+    Ld, H, hd = cfg.n_layers, cfg.n_heads, cfg.hd
+    Te = cfg.encoder_seq
+    return {
+        "self_k": jnp.zeros((Ld, batch, smax, H, hd), cfg.cdt),
+        "self_v": jnp.zeros((Ld, batch, smax, H, hd), cfg.cdt),
+        "cross_k": jnp.zeros((Ld, batch, Te, H, hd), cfg.cdt),
+        "cross_v": jnp.zeros((Ld, batch, Te, H, hd), cfg.cdt),
+    }
+
+
+def whisper_decode_step(cfg: ModelConfig, params, caches, token, pos):
+    """token (B,), pos (B,). Cross K/V must be pre-filled (from
+    whisper_encode via prefill); self K/V updated per step."""
+    B = token.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    x = params["embed"].astype(cfg.cdt)[token] \
+        + params["pos_dec"][pos].astype(cfg.cdt)
+    bidx = jnp.arange(B)
+    cross_pos = jnp.full((B,), cfg.encoder_seq - 1, jnp.int32)
+
+    def body(x, pc):
+        p, sk, sv, ck, cv = pc
+        h = layer_norm(x[:, None, :], p["s_ln_w"], p["s_ln_b"])[:, 0]
+        q = (h @ p["s_wq"].astype(h.dtype) + p["s_bq"].astype(h.dtype)).reshape(B, H, hd)
+        k = (h @ p["s_wk"].astype(h.dtype)).reshape(B, H, hd)
+        v = (h @ p["s_wv"].astype(h.dtype) + p["s_bv"].astype(h.dtype)).reshape(B, H, hd)
+        sk = sk.at[bidx, pos].set(k.astype(sk.dtype))
+        sv = sv.at[bidx, pos].set(v.astype(sv.dtype))
+        o = decode_attention(q, sk, sv, pos)
+        x = x + (o.reshape(B, H * hd) @ p["s_wo"].astype(h.dtype)
+                 + p["s_bo"].astype(h.dtype))
+        # cross attention over the (static) encoder cache
+        h = layer_norm(x[:, None, :], p["x_ln_w"], p["x_ln_b"])[:, 0]
+        q = (h @ p["x_wq"].astype(h.dtype) + p["x_bq"].astype(h.dtype)).reshape(B, H, hd)
+        o = decode_attention(q, ck, cv, cross_pos)
+        x = x + (o.reshape(B, H * hd) @ p["x_wo"].astype(h.dtype)
+                 + p["x_bo"].astype(h.dtype))
+        h = layer_norm(x[:, None, :], p["m_ln_w"], p["m_ln_b"])[:, 0]
+        h = jax.nn.gelu(h @ p["w_up"].astype(h.dtype) + p["b_up"].astype(h.dtype),
+                        approximate=True)
+        x = x + (h @ p["w_down"].astype(h.dtype) + p["b_down"].astype(h.dtype))
+        return x, (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        body, x, (params["dec"], caches["self_k"], caches["self_v"],
+                  caches["cross_k"], caches["cross_v"]))
+    caches = dict(caches, self_k=new_sk, self_v=new_sv)
+    x = layer_norm(x[:, None, :], params["dec_ln_w"], params["dec_ln_b"])[:, 0]
+    return (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32), caches

@@ -1,0 +1,10 @@
+from repro.train.optimizer import OptConfig, OptState, opt_init, opt_update
+from repro.train.step import (make_train_step, make_prefill_step,
+                              make_decode_step, make_loss_fn, cross_entropy)
+from repro.train import checkpoint
+from repro.train.ft import ElasticTrainer, StepWatchdog
+
+__all__ = ["OptConfig", "OptState", "opt_init", "opt_update",
+           "make_train_step", "make_prefill_step", "make_decode_step",
+           "make_loss_fn", "cross_entropy", "checkpoint", "ElasticTrainer",
+           "StepWatchdog"]

@@ -1,0 +1,115 @@
+"""Fault tolerance & elasticity for long multi-pod runs.
+
+What is implemented and exercised on this container:
+  * checkpoint/restart: `ElasticTrainer` checkpoints every `ckpt_every`
+    steps (async), survives injected failures, resumes from the latest
+    committed step with bit-exact state (tests/test_train.py).
+  * deterministic data: batches are derived from (seed, step) only, so a
+    resumed run consumes exactly the batches it would have — no data loss
+    or duplication across restarts (the dedup pipeline is itself stateful
+    and checkpointable: HNSWState is a pytree, saved with the params).
+  * elastic re-mesh: checkpoints store full logical tensors; restore
+    device_puts with the *new* mesh's shardings, so a 512-chip run can
+    resume on 256 chips (capacity loss) or vice versa.
+
+What is designed-for but only documented here (needs real fleet runtime):
+  * straggler mitigation: with GSPMD all collectives are synchronous; the
+    deployment recipe is (a) XLA latency-hiding scheduler + async
+    collectives flags (launch/mesh.py sets them), (b) per-step host
+    watchdog — if a step exceeds p99*K, snapshot and re-schedule the slow
+    host out (the watchdog hook is `StepWatchdog` below), (c) data-plane
+    stragglers absorbed by the prefetch queue in data/ingest.
+  * hardware failure detection: on TPU pods, a missing heartbeat fails the
+    whole slice; recovery = restart from latest checkpoint (measured MTTR
+    is checkpoint cadence + restore time; with async saves every 100 steps
+    the loss is <=100 steps of compute).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+__all__ = ["ElasticTrainer", "StepWatchdog"]
+
+
+class StepWatchdog:
+    """Tracks step latencies; flags stragglers at K x trailing-p50."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor = factor
+        self.window = window
+        self.history: list[float] = []
+
+    def observe(self, dt: float) -> bool:
+        self.history.append(dt)
+        hist = self.history[-self.window:]
+        if len(hist) < 10:
+            return False
+        p50 = float(np.median(hist[:-1]))
+        return dt > self.factor * p50
+
+
+class ElasticTrainer:
+    """Checkpointed training loop with failure injection for tests.
+
+    `make_batch(step) -> batch` must be deterministic in `step` so that
+    resume replays the exact stream.
+    """
+
+    def __init__(self, train_step, params, opt_state, make_batch,
+                 ckpt_dir: str, ckpt_every: int = 10, async_save: bool = True):
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.make_batch = make_batch
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.async_save = async_save
+        self.step = 0
+        self.watchdog = StepWatchdog()
+        self.metrics_log: list[dict] = []
+
+    def maybe_resume(self):
+        last = ckpt.latest_step(self.ckpt_dir)
+        if last is None:
+            return False
+        state = ckpt.restore(self.ckpt_dir, last,
+                             {"params": self.params, "opt": self.opt_state})
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = last
+        return True
+
+    def _save(self):
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.async_save:
+            ckpt.save_async(self.ckpt_dir, self.step, tree)
+        else:
+            ckpt.save(self.ckpt_dir, self.step, tree)
+
+    def run(self, n_steps: int, *, fail_at: int | None = None):
+        """Run to self.step == n_steps; raises RuntimeError at `fail_at`
+        (failure injection for tests) AFTER completing that step's compute
+        but before its checkpoint — the worst-case loss window."""
+        while self.step < n_steps:
+            t0 = time.perf_counter()
+            batch = self.make_batch(self.step)
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            self.step += 1
+            dt = time.perf_counter() - t0
+            self.metrics_log.append(
+                {"step": self.step, "dt": dt,
+                 **{k: float(v) for k, v in metrics.items()}})
+            if self.watchdog.observe(dt):
+                self.metrics_log[-1]["straggler"] = True
+            if fail_at is not None and self.step == fail_at:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            if self.step % self.ckpt_every == 0:
+                self._save()
+        ckpt.wait_pending()
+        return self.metrics_log

@@ -1,0 +1,96 @@
+"""AdamW from scratch, with dtype policies for multi-hundred-B models.
+
+State dtype policy: `state_dtype="float32"` default; the 235B/314B configs
+use `"bfloat16"` moments + f32 master weights are the params themselves
+(params stay in their declared dtype; no separate master copy — the update
+math runs in f32 and casts back, which with bf16 params is the standard
+memory-lean recipe for giants).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "OptState", "opt_init", "opt_update", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"       # moments dtype
+
+    @property
+    def sdt(self):
+        return jnp.bfloat16 if self.state_dtype == "bfloat16" else jnp.float32
+
+
+class OptState(NamedTuple):
+    m: object
+    v: object
+    step: jnp.ndarray
+
+
+def opt_init(params, cfg: OptConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.sdt)
+    return OptState(m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def lr_at(step, cfg: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def opt_update(grads, state: OptState, params, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = lr_at(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1t = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1t
+        vhat = v32 / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        # decoupled weight decay on >=2D tensors only (norms/biases exempt)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m32.astype(cfg.sdt), v32.astype(cfg.sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(new_m, new_v, step), metrics

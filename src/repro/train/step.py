@@ -1,0 +1,121 @@
+"""Train / prefill / decode step builders for every architecture family.
+
+`make_train_step(cfg, opt_cfg)` returns a pure function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+suitable for jit with in/out shardings. Batches are dicts (see
+launch/dryrun.input_specs for the exact shapes per cell):
+
+  lm:     tokens (B,S) int32, labels (B,S) int32, loss_mask (B,S) f32
+  vlm:    + patch_embeds (B,P,D) f32 (stub frontend output)
+  encdec: frames (B,Te,D) f32, tokens/labels/loss_mask over decoder seq
+
+Gradient accumulation: `grad_accum > 1` scans over microbatches (leading
+batch dim split), summing f32 grads — the standard memory/throughput trade.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models import whisper as W
+from repro.models.config import ModelConfig
+from repro.train.optimizer import OptConfig, opt_update
+
+__all__ = ["make_loss_fn", "make_train_step", "make_prefill_step",
+           "make_decode_step", "cross_entropy"]
+
+
+def cross_entropy(logits, labels, mask):
+    """Masked mean CE. logits (B,S,V) f32; labels (B,S) int32; mask (B,S)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return ce.sum() / denom
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat: bool = True):
+    if cfg.family == "encdec":
+        def loss_fn(params, batch):
+            logits = W.whisper_forward(cfg, params, batch["frames"],
+                                       batch["tokens"], remat=remat)
+            loss = cross_entropy(logits, batch["labels"], batch["loss_mask"])
+            return loss, {"loss": loss}
+        return loss_fn
+
+    def loss_fn(params, batch):
+        prefix = batch.get("patch_embeds") if cfg.family == "vlm" else None
+        logits = T.lm_forward(cfg, params, batch["tokens"],
+                              prefix_embeds=prefix, remat=remat)
+        if prefix is not None:
+            logits = logits[:, cfg.prefix_len:]
+        loss = cross_entropy(logits, batch["labels"], batch["loss_mask"])
+        return loss, {"loss": loss}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    grad_accum: int = 1, remat: bool = True):
+    loss_fn = make_loss_fn(cfg, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            # accumulate in f32 for f32 params; for bf16 giants accumulate
+            # in bf16 (halves the largest train-time buffers; the optimizer
+            # update still runs its math in f32)
+            acc_dt = lambda p: (jnp.float32 if p.dtype == jnp.float32
+                                else p.dtype)
+
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt(p)), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), split)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            aux = {"loss": loss}
+        params, opt_state, om = opt_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {**aux, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, remat: bool = False):
+    """Inference forward (logits only) — the prefill_32k cell."""
+    if cfg.family == "encdec":
+        def prefill(params, batch):
+            return W.whisper_forward(cfg, params, batch["frames"],
+                                     batch["tokens"], remat=remat)
+        return prefill
+
+    def prefill(params, batch):
+        prefix = batch.get("patch_embeds") if cfg.family == "vlm" else None
+        return T.lm_forward(cfg, params, batch["tokens"],
+                            prefix_embeds=prefix, remat=remat)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """serve_step: one new token against a seq_len KV cache."""
+    if cfg.family == "encdec":
+        def decode(params, caches, token, pos):
+            return W.whisper_decode_step(cfg, params, caches, token, pos)
+        return decode
+
+    def decode(params, caches, token, pos):
+        return T.lm_decode_step(cfg, params, caches, token, pos)
+    return decode

@@ -1,0 +1,189 @@
+"""End-to-end FOLD pipeline behaviour + baselines on synthetic corpora."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines import (BruteForcePipeline, DPKPipeline, FlatLSHPipeline,
+                             RawHNSWPipeline)
+from repro.baselines.base import pick_bands
+from repro.core.dedup import FoldConfig, FoldPipeline, _greedy_leader, bitmap_tau
+from repro.data.corpus import DATASET_PRESETS, SyntheticCorpus
+
+CFG = DATASET_PRESETS["common_crawl"]
+
+
+def _run(pipe, n_batches=3, batch=192):
+    src = SyntheticCorpus(CFG)
+    keeps = []
+    for _ in range(n_batches):
+        tokens, lengths, _ = src.next_batch(batch)
+        keep, stats = pipe.process_batch(tokens, lengths)
+        keeps.append(keep)
+    return np.concatenate(keeps)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    return _run(BruteForcePipeline(capacity=1 << 13))
+
+
+def test_fold_recall_vs_brute_force(reference):
+    fc = FoldConfig(capacity=2048, ef_construction=48, ef_search=48,
+                    threshold_space="minhash")
+    keep = _run(FoldPipeline(fc))
+    ref_dup = ~reference
+    dup = ~keep
+    recall = (dup & ref_dup).sum() / max(ref_dup.sum(), 1)
+    fp = (dup & ~ref_dup).sum() / max((~ref_dup).sum(), 1)
+    assert recall > 0.9, recall
+    assert fp < 0.05, fp
+
+
+def test_faithful_bitmap_threshold_is_stricter(reference):
+    """Paper-faithful bitmap-space tau admits more docs (stricter dup rule)."""
+    strict = _run(FoldPipeline(FoldConfig(capacity=2048, ef_construction=48,
+                                          ef_search=48,
+                                          threshold_space="bitmap")))
+    calib = _run(FoldPipeline(FoldConfig(capacity=2048, ef_construction=48,
+                                         ef_search=48,
+                                         threshold_space="minhash")))
+    assert strict.sum() >= calib.sum()
+
+
+def test_dpk_recall(reference):
+    keep = _run(DPKPipeline(capacity=1 << 13))
+    ref_dup = ~reference
+    recall = ((~keep) & ref_dup).sum() / max(ref_dup.sum(), 1)
+    assert recall > 0.85, recall
+
+
+def test_raw_hnsw_jaccard_lower_recall_than_fold(reference):
+    """Paper §3.2: naive Jaccard-in-HNSW loses recall vs FOLD's bitmap."""
+    fold = _run(FoldPipeline(FoldConfig(capacity=2048, ef_construction=48,
+                                        ef_search=48,
+                                        threshold_space="minhash")))
+    raw = _run(RawHNSWPipeline("minhash_jaccard", capacity=2048,
+                               ef_construction=48, ef_search=48))
+    ref_dup = ~reference
+    r_fold = ((~fold) & ref_dup).sum() / ref_dup.sum()
+    r_raw = ((~raw) & ref_dup).sum() / ref_dup.sum()
+    assert r_fold > r_raw + 0.1, (r_fold, r_raw)
+
+
+def test_idempotence():
+    """Processing the exact same batch twice: all docs are dups 2nd time."""
+    fc = FoldConfig(capacity=2048, ef_construction=48, ef_search=48,
+                    threshold_space="minhash")
+    pipe = FoldPipeline(fc)
+    src = SyntheticCorpus(CFG)
+    tokens, lengths, _ = src.next_batch(128)
+    keep1, _ = pipe.process_batch(tokens, lengths)
+    keep2, _ = pipe.process_batch(tokens, lengths)
+    assert keep1.sum() > 0
+    assert keep2.sum() == 0, f"{keep2.sum()} re-admitted"
+
+
+def test_stats_accounting():
+    fc = FoldConfig(capacity=2048, ef_construction=32, ef_search=32)
+    pipe = FoldPipeline(fc)
+    src = SyntheticCorpus(CFG)
+    tokens, lengths, _ = src.next_batch(128)
+    keep, stats = pipe.process_batch(tokens, lengths)
+    assert stats["n_batch_drop"] + stats["n_index_drop"] + stats["n_insert"] == 128
+    assert stats["n_insert"] == keep.sum() == stats["count"]
+    for k in ("t_signature", "t_in_batch", "t_search", "t_insert"):
+        assert stats[k] >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31))
+def test_greedy_leader_matches_python(seed):
+    rng = np.random.default_rng(seed)
+    n = rng.integers(2, 24)
+    sim = rng.random((n, n)).astype(np.float32)
+    sim = (sim + sim.T) / 2
+    np.fill_diagonal(sim, 1.0)
+    got = np.asarray(_greedy_leader(jnp.asarray(sim), 0.6))
+    keep = []
+    exp = np.zeros(n, bool)
+    for i in range(n):
+        if not any(sim[i, j] >= 0.6 for j in keep):
+            keep.append(i)
+            exp[i] = True
+    assert (got == exp).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 256), st.floats(0.3, 0.95))
+def test_pick_bands_calibration(h, tau):
+    b, r = pick_bands(h, tau)
+    assert b * r <= h and b >= 1 and r >= 1
+    if b > 1:
+        thr = (1.0 / b) ** (1.0 / r)
+        assert abs(thr - tau) < 0.25
+
+
+def test_bitmap_tau_calibration():
+    fc = FoldConfig(threshold_space="minhash", tau=0.7)
+    assert abs(bitmap_tau(fc) - 0.7 / 1.3) < 1e-9
+    fc2 = FoldConfig(threshold_space="bitmap", tau=0.7)
+    assert bitmap_tau(fc2) == 0.7
+
+
+def test_select_heuristic_improves_dense_recall():
+    """Beyond-paper: hnswlib-style diverse neighbor selection lifts recall
+    in duplicate-dense clusters at low ef (measured 0.855 -> 0.924 @ ef=32)."""
+    import jax.numpy as jnp
+    from repro.core.bitmap import pack_bitmaps, popcount, pairwise_bitmap_jaccard
+    from repro.core.hnsw import (HNSWConfig, hnsw_init, hnsw_insert_batch,
+                                 hnsw_search, sample_levels)
+    rng = np.random.default_rng(0)
+    N, H = 500, 112
+    base = rng.integers(0, 2**32, (N, H), dtype=np.uint32)
+    for i in range(N):
+        if i > 10 and rng.random() < 0.6:
+            j = rng.integers(0, i)
+            base[i] = base[j].copy()
+            lanes = rng.choice(H, rng.integers(2, 15), replace=False)
+            base[i, lanes] = rng.integers(0, 2**32, len(lanes), dtype=np.uint32)
+    bm = pack_bitmaps(jnp.asarray(base), T=4096)
+    pcs = popcount(bm)
+    full = np.asarray(pairwise_bitmap_jaccard(bm, bm))
+    gt = np.argsort(-full, axis=1)[:, :4]
+    recalls = {}
+    for heur in (False, True):
+        cfg = HNSWConfig(capacity=512, words=128, M=12, M0=24,
+                         ef_construction=32, ef_search=32, max_level=3,
+                         select_heuristic=heur)
+        st = hnsw_init(cfg)
+        st = hnsw_insert_batch(cfg, st, bm, pcs,
+                               jnp.asarray(sample_levels(N, cfg)),
+                               jnp.ones(N, bool))
+        ids, _ = hnsw_search(cfg, st, bm, k=4)
+        got = np.asarray(ids)
+        recalls[heur] = np.mean([len(set(gt[i]) & set(got[i])) / 4
+                                 for i in range(N)])
+    assert recalls[True] >= recalls[False], recalls
+    assert recalls[True] > 0.85
+
+
+def test_pipeline_checkpoint_restore(tmp_path):
+    """The evolving dedup index checkpoints and resumes exactly (FT story:
+    corpus construction survives restarts alongside training state)."""
+    from repro.data.corpus import SyntheticCorpus, DATASET_PRESETS
+    fc = FoldConfig(capacity=2048, ef_construction=32, ef_search=32,
+                    threshold_space="minhash")
+    src = SyntheticCorpus(DATASET_PRESETS["common_crawl"])
+    b1 = src.next_batch(128)
+    b2 = src.next_batch(128)
+
+    pipe = FoldPipeline(fc)
+    keep1, _ = pipe.process_batch(b1[0], b1[1])
+    pipe.save(str(tmp_path), step=1)
+    keep2_ref, _ = pipe.process_batch(b2[0], b2[1])
+
+    pipe2 = FoldPipeline(fc)
+    assert pipe2.restore(str(tmp_path)) == 1
+    keep2, _ = pipe2.process_batch(b2[0], b2[1])
+    assert np.array_equal(keep2, keep2_ref)

@@ -1,0 +1,165 @@
+"""Distribution layer: sharding plans, hlocost parser, sharded dedup
+(subprocess with 8 virtual devices), and a mini 4-device e2e train."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sharding_plan_divisibility():
+    import jax
+    from repro.configs import get_config
+    from repro.dist.sharding import make_plan
+    from repro.models import transformer as T
+    if len(jax.devices()) != 1:
+        pytest.skip("plan test assumes host devices")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ("qwen1_5_4b", "grok_1_314b", "falcon_mamba_7b"):
+        cfg = get_config(arch)
+        plan = make_plan(cfg, mesh)
+        specs = T.param_specs(cfg)
+        pspecs = plan.params(specs)
+        flat = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+        assert all(isinstance(p, P) for p in flat)
+
+
+def test_hlocost_parser_loop_multiplication():
+    from repro.launch.hlocost import analyze_hlo
+    hlo = textwrap.dedent("""\
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,16] get-tuple-element(%p), index=1
+      %w = f32[16,16] constant({...})
+      %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16] all-reduce(%dot.1), replica_groups={}
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+    }
+
+    %cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+      %p2 = (s32[], f32[8,16]) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %lim = s32[] constant(10)
+      ROOT %cmp = pred[] compare(%i2, %lim), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16] parameter(0)
+      %z = s32[] constant(0)
+      %t0 = (s32[], f32[8,16]) tuple(%z, %a)
+      %w.1 = (s32[], f32[8,16]) while(%t0), condition=%cond.1, body=%body.1
+      ROOT %r = f32[8,16] get-tuple-element(%w.1), index=1
+    }
+    """)
+    cost = analyze_hlo(hlo)
+    # dot: 2*8*16*16 = 4096 flops x 10 trips
+    assert cost.flops >= 40960
+    assert cost.flops < 40960 * 1.2         # small elementwise slack
+    # all-reduce: 8*16*4 bytes x 10 trips, wire 2x
+    assert cost.collectives["all-reduce"] == 8 * 16 * 4 * 10
+    assert cost.wire_bytes == 2 * 8 * 16 * 4 * 10
+
+
+def test_sharded_dedup_8dev():
+    out = _run_subprocess("""
+    import numpy as np, jax, jax.numpy as jnp
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    from repro.core.hnsw import HNSWConfig, sample_levels
+    from repro.core.sharded import sharded_init, make_sharded_dedup_step
+    from repro.core.bitmap import pack_bitmaps, popcount
+    cfg = HNSWConfig(capacity=256, words=128, M=8, M0=16, ef_construction=16,
+                     ef_search=16, max_level=2)
+    states = sharded_init(cfg, mesh)
+    step = jax.jit(make_sharded_dedup_step(cfg, mesh, tau=0.538, k=4))
+    rng = np.random.default_rng(0)
+    sigs = rng.integers(0, 2**32, (64, 112), dtype=np.uint32)
+    bm = pack_bitmaps(jnp.asarray(sigs), T=4096)
+    lv = jnp.asarray(sample_levels(64, cfg))
+    states, keep1 = step(states, bm, popcount(bm), lv)
+    states, keep2 = step(states, bm, popcount(bm), lv)  # replay -> all dups
+    print("ADMIT1", int(keep1.sum()), "ADMIT2", int(keep2.sum()))
+    assert int(keep1.sum()) == 64 and int(keep2.sum()) == 0
+    print("PASS")
+    """)
+    assert "PASS" in out
+
+
+def test_spmd_train_4dev_matches_1dev():
+    """Mini e2e: 4-device (2x2 mesh) sharded train step == single device."""
+    out = _run_subprocess("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import reduced_config
+    from repro.dist import act
+    from repro.dist.sharding import make_plan, batch_pspecs
+    from repro.models import transformer as T
+    from repro.models.common import init_params
+    from repro.train import OptConfig, opt_init, make_train_step
+    cfg = reduced_config("qwen1_5_4b")
+    params = init_params(T.param_specs(cfg), jax.random.PRNGKey(0))
+    oc = OptConfig(lr=1e-3, warmup_steps=1, decay_steps=10)
+    opt = opt_init(params, oc)
+    step = make_train_step(cfg, oc)
+    r = np.random.default_rng(0)
+    B, S = 4, 64
+    t = r.integers(0, cfg.vocab, (B, S + 1))
+    batch = {"tokens": jnp.asarray(t[:, :-1], jnp.int32),
+             "labels": jnp.asarray(t[:, 1:], jnp.int32),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    # single-device reference
+    p1, o1, m1 = jax.jit(step)(params, opt, batch)
+    # 2x2 mesh SPMD
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    plan = make_plan(cfg, mesh)
+    psh = plan.shardings(T.param_specs(cfg))
+    osh = type(opt)(m=psh, v=psh, step=NamedSharding(mesh, P()))
+    bsh = {k: NamedSharding(mesh, s) for k, s in
+           batch_pspecs(cfg, mesh, "train", B).items()}
+    act.set_mesh(mesh)
+    fn = jax.jit(step, in_shardings=(psh, osh, bsh),
+                 out_shardings=(psh, osh, None))
+    p2, o2, m2 = fn(params, opt, batch)
+    act.clear()
+    print("LOSS", float(m1["loss"]), float(m2["loss"]))
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = max(float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    print("MAXDIFF", d)
+    assert d < 2e-3
+    print("PASS")
+    """, devices=4)
+    assert "PASS" in out
+
+
+def test_cache_pspecs_shapes():
+    import jax
+    from repro.configs import get_config
+    from repro.dist.sharding import cache_pspecs
+    from repro.models import transformer as T
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("falcon_mamba_7b")
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, 8, 64))
+    specs = cache_pspecs(cfg, mesh, caches, 8)
+    assert jax.tree.structure(caches) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
