@@ -14,7 +14,7 @@ import sys
 
 SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
             "fig9_largescale", "table3_collisions", "appendix_hamming",
-            "dist_scaling", "roofline"]
+            "dist_scaling", "service_throughput", "roofline"]
 
 
 def main() -> None:

@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["HNSWConfig", "HNSWState", "hnsw_init", "hnsw_insert_batch",
-           "hnsw_search", "sample_levels", "METRICS"]
+__all__ = ["HNSWConfig", "HNSWState", "hnsw_init", "hnsw_grow",
+           "hnsw_insert_batch", "hnsw_search", "sample_levels", "METRICS"]
 
 METRICS = ("bitmap_jaccard", "minhash_jaccard", "hamming")
 
@@ -85,6 +85,36 @@ def hnsw_init(cfg: HNSWConfig) -> HNSWState:
         top_level=jnp.int32(-1),
         count=jnp.int32(0),
     )
+
+
+def hnsw_grow(cfg: HNSWConfig, state: HNSWState,
+              new_capacity: int) -> tuple[HNSWConfig, HNSWState]:
+    """Functionally re-pad the dense arrays to a larger capacity.
+
+    The graph is preserved exactly: neighbors/levels/entry/count are copied,
+    new slots are empty (-1 level, -1 adjacency) and unreachable, so search
+    on the grown index returns identical results to the original. Capacity is
+    static in the jitted search/insert programs, so the first call after a
+    grow recompiles once — the index lifecycle layer (repro.service) grows
+    geometrically to bound that to O(log corpus) compiles.
+    """
+    if new_capacity < cfg.capacity:
+        raise ValueError(f"cannot shrink: {new_capacity} < {cfg.capacity}")
+    if new_capacity == cfg.capacity:
+        return cfg, state
+    pad = new_capacity - cfg.capacity
+    new_cfg = cfg._replace(capacity=new_capacity)
+    new_state = HNSWState(
+        vectors=jnp.pad(state.vectors, ((0, pad), (0, 0))),
+        pb=jnp.pad(state.pb, (0, pad)),
+        neighbors=jnp.pad(state.neighbors, ((0, 0), (0, pad), (0, 0)),
+                          constant_values=-1),
+        node_level=jnp.pad(state.node_level, (0, pad), constant_values=-1),
+        entry=state.entry,
+        top_level=state.top_level,
+        count=state.count,
+    )
+    return new_cfg, new_state
 
 
 def sample_levels(n: int, cfg: HNSWConfig, seed: int = 0) -> np.ndarray:

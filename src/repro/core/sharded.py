@@ -61,7 +61,8 @@ def sharded_state_specs(mesh: Mesh, axis: str = "data"):
 
 def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
                             k: int = 4, axis: str = "data",
-                            query_chunk: int = 0, sub_batches: int = 1):
+                            query_chunk: int = 0, sub_batches: int = 1,
+                            masked: bool = False):
     """Returns jit-able `step(states, bitmaps, pcs, levels) -> (states, keep)`.
 
     bitmaps (B, W) sharded over `axis` on the batch dim; states stacked
@@ -73,10 +74,16 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
     bounding the quadratic in-batch work and the search working set.
     query_chunk bounds the (chunk, capacity) visited masks of the batched
     HNSW search (see EXPERIMENTS.md §Perf).
+
+    masked=True adds a 5th argument `valid (B,) bool` (sharded like the
+    batch): False rows are shape padding from the serving micro-batcher —
+    they are excluded from admission and their keep comes back False. The
+    step then returns (states, keep, keep_in) so the serving layer can
+    distinguish in-batch duplicates from index duplicates.
     """
     nshards = mesh.shape[axis]
 
-    def one_sub(state, my, q, pc, lv):
+    def one_sub(state, my, q, pc, lv, va):
         B = q.shape[0]
         # (2) in-batch dedup — block-chunked pairwise (no (B,B,W) temp)
         from repro.core.bitmap import chunked_pairwise_bitmap_jaccard
@@ -88,12 +95,14 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
         best = jnp.max(jnp.where(ids >= 0, sims, -jnp.inf), axis=-1)
         best_global = jax.lax.pmax(best, axis)
         keep = keep_in & (best_global < tau)
+        if va is not None:
+            keep = keep & va
         # (5) round-robin shard assignment for admitted docs
         mine = (jnp.arange(B, dtype=jnp.int32) % nshards) == my
         state = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine)
-        return state, keep
+        return state, keep, keep_in
 
-    def local(state, bitmaps, pcs, levels):
+    def local(state, bitmaps, pcs, levels, valid=None):
         # shard_map keeps a size-1 leading block axis; drop it per device
         state = jax.tree.map(lambda x: x[0], state)
         my = jax.lax.axis_index(axis)
@@ -101,23 +110,40 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
         q_all = jax.lax.all_gather(bitmaps, axis, tiled=True)   # (B, W)
         pc_all = jax.lax.all_gather(pcs, axis, tiled=True)
         lv_all = jax.lax.all_gather(levels, axis, tiled=True)
+        va_all = (jax.lax.all_gather(valid, axis, tiled=True)
+                  if valid is not None else None)
         B = q_all.shape[0]
         if sub_batches > 1 and B % sub_batches == 0:
             sb = B // sub_batches
-            keeps = []
+            keeps, keep_ins = [], []
             for j in range(sub_batches):  # sequential: slice j sees j' < j
                 sl = slice(j * sb, (j + 1) * sb)
-                state, kj = one_sub(state, my, q_all[sl], pc_all[sl],
-                                    lv_all[sl])
+                state, kj, kij = one_sub(
+                    state, my, q_all[sl], pc_all[sl], lv_all[sl],
+                    va_all[sl] if va_all is not None else None)
                 keeps.append(kj)
+                keep_ins.append(kij)
             keep = jnp.concatenate(keeps)
+            keep_in = jnp.concatenate(keep_ins)
         else:
-            state, keep = one_sub(state, my, q_all, pc_all, lv_all)
-        return jax.tree.map(lambda x: x[None], state), keep
+            state, keep, keep_in = one_sub(state, my, q_all, pc_all, lv_all,
+                                           va_all)
+        state = jax.tree.map(lambda x: x[None], state)
+        if masked:
+            return state, keep, keep_in
+        return state, keep
 
-    step = jax.shard_map(
+    # jax.shard_map only exists from 0.6; fall back to the experimental
+    # location (0.4.x) where the replication-check kwarg is `check_rep`.
+    if hasattr(jax, "shard_map"):
+        smap = functools.partial(jax.shard_map, check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _shard_map
+        smap = functools.partial(_shard_map, check_rep=False)
+    n_in = 5 if masked else 4
+    out_keep = (P(), P()) if masked else (P(),)
+    step = smap(
         local, mesh=mesh,
-        in_specs=(HNSWState(*(P(axis),) * 7), P(axis), P(axis), P(axis)),
-        out_specs=(HNSWState(*(P(axis),) * 7), P()),
-        check_vma=False)
+        in_specs=(HNSWState(*(P(axis),) * 7),) + (P(axis),) * (n_in - 1),
+        out_specs=(HNSWState(*(P(axis),) * 7),) + out_keep)
     return step

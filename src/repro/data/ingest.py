@@ -20,16 +20,39 @@ __all__ = ["DedupIngest", "PackedBatches"]
 
 
 class DedupIngest:
-    def __init__(self, source, fold_cfg: FoldConfig | None = None):
+    """Dedup stage of the data pipeline, in one of two modes.
+
+    Direct (default): a private FoldPipeline, one blocking process_batch per
+    raw batch — simple, per-stage-timed, the Fig. 7 measurement path.
+
+    Service-backed: pass a repro.service.DedupService and raw batches are
+    submitted through its micro-batcher + pipelined executor instead —
+    ingestion shares the serving layer's shape bucketing, index growth and
+    snapshot rotation, and overlaps signature prep with index work. The
+    service may also be shared with other producers (its doc ids stay
+    globally unique).
+    """
+
+    def __init__(self, source, fold_cfg: FoldConfig | None = None,
+                 service=None):
         self.source = source
-        self.pipe = FoldPipeline(fold_cfg or FoldConfig())
+        self.service = service
+        self.pipe = (service.backend if service is not None
+                     else FoldPipeline(fold_cfg or FoldConfig()))
         self.total_in = 0
         self.total_admitted = 0
 
     def next_clean_batch(self, batch_size: int):
         """Pull one raw batch, dedup it, return admitted (tokens, lengths)."""
         tokens, lengths, _ = self.source.next_batch(batch_size)
-        keep, stats = self.pipe.process_batch(tokens, lengths)
+        if self.service is not None:
+            ticket = self.service.submit(tokens, lengths)
+            verdicts = self.service.results(ticket)
+            keep = np.asarray([v.admitted for v in verdicts])
+            stats = {"n_insert": int(keep.sum()),
+                     "service": self.service.metrics.counters.copy()}
+        else:
+            keep, stats = self.pipe.process_batch(tokens, lengths)
         self.total_in += len(keep)
         self.total_admitted += int(keep.sum())
         return tokens[keep], lengths[keep], stats

@@ -1,0 +1,14 @@
+"""Distribution layer: activation sharding anchors + parameter sharding plans.
+
+  act         — mesh-scoped `with_sharding_constraint` helpers dropped into
+                model code at the canonical activation shapes (B,S,d), (B,d),
+                logits. No-ops when no mesh is set (single-device tests).
+  sharding    — ShardingPlan (logical-axis rules -> PartitionSpecs with
+                divisibility filtering), batch/cache input specs, dp_axes.
+"""
+from repro.dist import act  # noqa: F401
+from repro.dist.sharding import (ShardingPlan, batch_pspecs, cache_pspecs,  # noqa: F401
+                                 dp_axes, make_plan)
+
+__all__ = ["act", "ShardingPlan", "make_plan", "batch_pspecs",
+           "cache_pspecs", "dp_axes"]

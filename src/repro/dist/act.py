@@ -1,0 +1,81 @@
+"""Activation sharding anchors.
+
+Model code calls `act.btd(x)` / `act.bd(x)` / `act.logits_spec(x)` at the
+canonical activation shapes. When a mesh is active (set by the launcher via
+`set_mesh`) these lower to `with_sharding_constraint`, pinning the batch dim
+to the data-parallel axes and logits' vocab dim to the tensor axis — the
+anchors that keep GSPMD from resharding activations mid-layer. With no mesh
+set (unit tests, single device) every helper is the identity, so model code
+never branches on topology.
+
+The mesh is process-global, not thread-local: one launcher owns the mesh for
+the lifetime of a lowering (`set_mesh` ... lower ... `clear`), matching how
+launch/train.py and launch/dryrun.py drive it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["set_mesh", "clear", "current_mesh", "btd", "bd", "logits_spec"]
+
+_MESH: Mesh | None = None
+
+
+def set_mesh(mesh: Mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def clear() -> None:
+    global _MESH
+    _MESH = None
+
+
+def current_mesh() -> Mesh | None:
+    return _MESH
+
+
+def _constrain(x, parts):
+    if _MESH is None or _MESH.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*parts)))
+
+
+def _model_axis_for(dim: int):
+    """Shard a feature dim over "model" only when it divides evenly."""
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return None
+    return "model" if dim % _MESH.shape["model"] == 0 else None
+
+
+def _dp_axis_for(dim: int):
+    """Batch-dim rule: the shared dp-axes convention, divisibility-gated."""
+    if _MESH is None:
+        return None
+    from repro.dist.sharding import dp_axes
+    dp = dp_axes(_MESH)
+    if not dp:
+        return None
+    n = math.prod(_MESH.shape[a] for a in dp)
+    return dp if dim % n == 0 else None
+
+
+def btd(x):
+    """(B, S, d) residual-stream activation: batch over DP, d replicated
+    (TP keeps weights sharded and all-reduces partial sums back)."""
+    return _constrain(x, (_dp_axis_for(x.shape[0]), None, None))
+
+
+def bd(x):
+    """(B, d) single-token decode activation."""
+    return _constrain(x, (_dp_axis_for(x.shape[0]), None))
+
+
+def logits_spec(x):
+    """(B, S, V) logits: batch over DP, vocab over the tensor axis."""
+    return _constrain(x, (_dp_axis_for(x.shape[0]), None,
+                          _model_axis_for(x.shape[-1])))

@@ -1,0 +1,145 @@
+"""Sharding plans: logical parameter axes -> mesh PartitionSpecs.
+
+The ParamSpec substrate (models/common.py) annotates every parameter with
+logical axis names; this module owns the rules table that maps them onto the
+mesh. Two presets, selected by `make_plan(cfg, mesh, fsdp=...)`:
+
+  baseline (fsdp=True)  — FSDP over the data axes ("embed" -> dp) + TP over
+                          "model" for heads/kv_heads/mlp/ssm_inner/vocab;
+                          experts spread over the dp axes (expert parallel).
+  zero1   (fsdp=False)  — params TP-only (replicated over data); the caller
+                          shards optimizer moments with a separate fsdp plan.
+
+Every leaf spec is divisibility-filtered: a mesh axis is dropped from a dim
+that it does not divide evenly (reduced CPU configs are small and odd-sized;
+sharding must degrade to replication, never fail to lower).
+
+Also provided: `batch_pspecs` / `cache_pspecs` (input and KV-cache specs for
+jit in_shardings) and `dp_axes` (every mesh axis except "model" — "data",
+plus "pod" on multi-pod meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec
+from repro.models.config import ModelConfig
+
+__all__ = ["ShardingPlan", "make_plan", "batch_pspecs", "cache_pspecs",
+           "dp_axes"]
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel mesh axes: everything that is not the tensor axis."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _dp_size(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes(mesh))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_pspec(spec: ParamSpec, rules: dict, mesh: Mesh) -> P:
+    """Rules -> PartitionSpec for one leaf, with divisibility filtering and
+    no mesh axis repeated across dims of the same parameter."""
+    used: set[str] = set()
+    parts: list[Any] = []
+    for dim, name in zip(spec.shape, spec.axes):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in (rule if isinstance(rule, tuple) else (rule,))
+                     if a in mesh.axis_names and a not in used)
+        # drop trailing axes until the dim tiles evenly
+        while axes and dim % math.prod(mesh.shape[a] for a in axes) != 0:
+            axes = axes[:-1]
+        if not axes:
+            parts.append(None)
+        else:
+            parts.append(axes[0] if len(axes) == 1 else axes)
+            used.update(axes)
+    return P(*parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh
+    rules: dict
+
+    def params(self, specs):
+        """ParamSpec tree -> PartitionSpec tree."""
+        return jax.tree.map(lambda s: _leaf_pspec(s, self.rules, self.mesh),
+                            specs, is_leaf=_is_spec)
+
+    def shardings(self, specs):
+        """ParamSpec tree -> NamedSharding tree (jit in/out_shardings)."""
+        return jax.tree.map(lambda p: NamedSharding(self.mesh, p),
+                            self.params(specs),
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def make_plan(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True) -> ShardingPlan:
+    dp = dp_axes(mesh)
+    rules = {
+        "embed": dp if (fsdp and dp) else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "ssm_inner": "model",
+        "vocab": "model",
+        "expert": dp if dp else None,
+        "layers": None,
+    }
+    return ShardingPlan(mesh=mesh, rules=rules)
+
+
+def _batch_rule(mesh: Mesh, batch: int):
+    dp = dp_axes(mesh)
+    return dp if dp and batch % _dp_size(mesh) == 0 else None
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, kind: str,
+                 batch: int) -> dict[str, P]:
+    """PartitionSpecs for the model-input batch dict of a train/prefill cell.
+
+    Keys mirror launch/dryrun.py::input_specs exactly (jit in_shardings are
+    matched by tree structure)."""
+    b = _batch_rule(mesh, batch)
+    specs: dict[str, P] = {}
+    if cfg.family == "encdec":
+        specs["frames"] = P(b, None, None)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(b, None, None)
+    specs["tokens"] = P(b, None)
+    if kind == "train":
+        specs["labels"] = P(b, None)
+        specs["loss_mask"] = P(b, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, caches, batch: int):
+    """PartitionSpecs for a decode-cache tree.
+
+    Every cache leaf is stacked with a leading group axis (see
+    models/transformer.py::init_caches), so the batch dim is axis 1; it is
+    sharded over the DP axes when divisible, everything else replicated
+    (KV heads are few in reduced configs — TP over them rarely divides)."""
+    b = _batch_rule(mesh, batch)
+
+    def one(x):
+        ndim = len(x.shape)
+        parts = [None] * ndim
+        if ndim >= 2:
+            parts[1] = b
+        return P(*parts)
+
+    return jax.tree.map(one, caches)

@@ -44,6 +44,9 @@ def main():
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--dataset", default="common_crawl")
     ap.add_argument("--no-dedup", action="store_true")
+    ap.add_argument("--service", action="store_true",
+                    help="service-backed dedup ingestion: micro-batched, "
+                         "pipelined, auto-growing index (repro.service)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -60,12 +63,17 @@ def main():
                                      vocab=cfg.vocab)  # ids within model vocab
     src = SyntheticCorpus(corpus_cfg)
     packer = PackedBatches(batch=args.batch, seq_len=args.seq + 1)
+    fold_cfg = FoldConfig(capacity=1 << 15, ef_construction=48, ef_search=48,
+                          threshold_space="minhash")
     if args.no_dedup:
         ingest = None
+    elif args.service:
+        from repro.service import DedupService, ServiceConfig
+        svc = DedupService(ServiceConfig(fold=fold_cfg, max_batch=256,
+                                         max_wait_ms=0.0))
+        ingest = DedupIngest(src, service=svc)
     else:
-        ingest = DedupIngest(src, FoldConfig(
-            capacity=1 << 15, ef_construction=48, ef_search=48,
-            threshold_space="minhash"))
+        ingest = DedupIngest(src, fold_cfg)
 
     def fill_packer():
         while True:

@@ -1,0 +1,18 @@
+"""repro.service — the online dedup serving layer (production ingestion path).
+
+Sits on top of core/dedup.py (stage functions) and core/sharded.py (multi-
+device routing): dynamic micro-batching with bucketed shapes, a depth-bounded
+async-dispatch pipeline, index lifecycle management (growth + snapshot
+rotation), and a ticketed front API with serving metrics.
+"""
+from repro.service.batcher import MicroBatch, MicroBatcher, pow2_buckets  # noqa: F401
+from repro.service.executor import BatchOutcome, PipelinedExecutor  # noqa: F401
+from repro.service.index_manager import IndexManager, ShardedDedupBackend  # noqa: F401
+from repro.service.metrics import MetricsRegistry  # noqa: F401
+from repro.service.service import (DedupService, DocVerdict, ServiceConfig,  # noqa: F401
+                                   Ticket)
+
+__all__ = ["MicroBatch", "MicroBatcher", "pow2_buckets", "BatchOutcome",
+           "PipelinedExecutor", "IndexManager", "ShardedDedupBackend",
+           "MetricsRegistry", "DedupService", "DocVerdict", "ServiceConfig",
+           "Ticket"]

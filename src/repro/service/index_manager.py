@@ -1,0 +1,239 @@
+"""Index lifecycle: capacity growth, snapshot rotation, shard routing.
+
+Growth. The HNSW index is fixed-capacity dense arrays; `hnsw_grow` re-pads
+them functionally. The manager decides WHEN: occupancy is a device scalar
+and reading it would stall the executor's pipeline every batch, so the
+manager tracks a sync-free upper bound (last known count + docs dispatched
+since) and only pays a host sync when that bound crosses the high-water
+mark. Growth is geometric (default 2x) so the per-growth recompile of the
+search/insert programs amortizes to O(log corpus) compiles.
+
+Snapshots. Rolling rotation on top of train/checkpoint's atomic-commit
+layout: every `snapshot_every` batches the pipeline state is saved and only
+the newest `max_snapshots` committed steps are kept — restart cost is
+bounded and disk does not grow with corpus lifetime.
+
+Sharding. `ShardedDedupBackend` routes the dedup step onto the
+core/sharded.py multi-shard program (one HNSW sub-graph per device along a
+mesh axis) behind the same dedup_step(sigs, bitmaps, pcs, valid) surface the
+executor drives, so a multi-device host scales corpus capacity and search
+throughput without the service layer changing shape.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dedup import (FoldConfig, FoldPipeline, StepResult,
+                              bitmap_tau, fold_signatures)
+from repro.core.hashing import hash_seeds
+from repro.core.hnsw import sample_levels
+from repro.core.sharded import make_sharded_dedup_step, sharded_init
+from repro.train import checkpoint as ckpt
+
+__all__ = ["IndexManager", "ShardedDedupBackend"]
+
+
+class IndexManager:
+    def __init__(self, pipe: FoldPipeline, *, grow_watermark: float = 0.85,
+                 growth_factor: float = 2.0, max_capacity: int | None = None,
+                 snapshot_dir: str | None = None, snapshot_every: int = 0,
+                 max_snapshots: int = 3):
+        assert 0.0 < grow_watermark <= 1.0
+        assert growth_factor > 1.0
+        self.pipe = pipe
+        self.grow_watermark = grow_watermark
+        self.growth_factor = growth_factor
+        self.max_capacity = max_capacity
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.max_snapshots = max_snapshots
+        self.grow_events = 0
+        self.snapshots_taken = 0
+        self._known_count = 0      # occupancy at the last host sync
+        self._dispatched = 0       # docs submitted since that sync
+        self._batches = 0
+        # resume the step counter past any snapshots already on disk so a
+        # restarted service never clobbers committed history
+        self._snap_step = (ckpt.latest_step(snapshot_dir) or 0
+                           if snapshot_dir else 0)
+
+    # ------------------------------------------------------------- growth
+    def note_dispatched(self, n_docs: int):
+        """Record docs entering the pipeline (admitted count <= dispatched)."""
+        self._dispatched += n_docs
+
+    def maybe_grow(self, incoming: int = 0) -> bool:
+        """Grow if occupancy may cross the high-water mark once `incoming`
+        further docs are dispatched. Call BEFORE note_dispatched(incoming).
+
+        The upper bound (known + dispatched + incoming) is sync-free; only
+        when it crosses the mark do we read the true device count (one
+        pipeline bubble per growth decision, not per batch). Because the
+        bound covers the incoming batch and growth is sized until the bound
+        clears the mark, the index can never silently hit capacity — unless
+        max_capacity clamps the growth, which is the caller's explicit
+        ceiling."""
+        def mark() -> int:
+            return int(self.grow_watermark * self.pipe.capacity)
+
+        if self._known_count + self._dispatched + incoming < mark():
+            return False
+        # host sync: waits for every dispatched insert, so the true count
+        # covers everything except the incoming batch
+        self._known_count = self.pipe.inserted
+        self._dispatched = 0
+        if self._known_count + incoming < mark():
+            return False
+        new_cap = self.pipe.capacity
+        while self._known_count + incoming >= int(self.grow_watermark
+                                                  * new_cap):
+            # max() guards factors close to 1, where int(cap*f) == cap
+            new_cap = max(new_cap + 1, int(new_cap * self.growth_factor))
+        if self.max_capacity is not None:
+            new_cap = min(new_cap, self.max_capacity)
+        grew = new_cap > self.pipe.capacity
+        if grew:
+            self.pipe.grow(new_cap)
+            self.grow_events += 1
+        # max_capacity may have clamped growth below what the batch needs
+        # (or forbidden it entirely). Refuse rather than let
+        # hnsw_insert_batch silently drop rows whose verdicts would still
+        # claim 'admitted' — mirrors ShardedDedupBackend.
+        if self._known_count + incoming > self.pipe.capacity:
+            raise RuntimeError(
+                f"index full: {self._known_count} of {self.pipe.capacity} "
+                f"slots used, incoming batch of {incoming} may not fit and "
+                f"max_capacity={self.max_capacity} forbids further growth")
+        return grew
+
+    # ----------------------------------------------------------- snapshots
+    def after_batch(self):
+        """Per-materialized-batch hook: periodic snapshot rotation.
+
+        Periodic snapshots write asynchronously (device->host copy now,
+        disk in a background thread) so the dispatch pipeline never stalls
+        on I/O; at most one write is in flight at a time."""
+        self._batches += 1
+        if (self.snapshot_dir and self.snapshot_every
+                and self._batches % self.snapshot_every == 0):
+            self.snapshot(sync=False)
+
+    def snapshot(self, sync: bool = True) -> int:
+        assert self.snapshot_dir, "no snapshot_dir configured"
+        ckpt.wait_pending()     # order writes; rotation then sees the truth
+        self._snap_step += 1
+        self.pipe.save(self.snapshot_dir, self._snap_step,
+                       async_write=not sync)
+        self.snapshots_taken += 1
+        # rotate committed steps; an in-flight async write is not listed
+        # yet, so keep one fewer committed step to land on max_snapshots
+        keep = self.max_snapshots - (0 if sync else 1)
+        steps = ckpt.list_steps(self.snapshot_dir)
+        for old in (steps[:-keep] if keep > 0 else steps):
+            shutil.rmtree(os.path.join(self.snapshot_dir,
+                                       f"step_{old:08d}"))
+        return self._snap_step
+
+    def wait_snapshots(self):
+        """Block until any in-flight async snapshot write has committed."""
+        ckpt.wait_pending()
+
+    def restore_latest(self) -> int | None:
+        if not self.snapshot_dir:
+            return None
+        ckpt.wait_pending()
+        step = ckpt.latest_step(self.snapshot_dir)
+        if step is None:
+            return None
+        self.pipe.restore(self.snapshot_dir, step)
+        self._snap_step = step
+        self._known_count = self.pipe.inserted
+        self._dispatched = 0
+        return step
+
+
+class ShardedDedupBackend:
+    """dedup_step-compatible facade over the multi-shard step.
+
+    Each device along `axis` owns an independent HNSW sub-graph over 1/N of
+    the admitted corpus (capacity below is PER SHARD). Batches are padded to
+    a multiple of nshards (extra rows valid=False), so the executor can
+    drive this exactly like a FoldPipeline. Retrieved neighbor ids/sims are
+    internal to the sharded top-k merge and surface as -1/-inf."""
+
+    def __init__(self, cfg: FoldConfig, shards: int | None = None,
+                 mesh=None, axis: str = "data"):
+        if mesh is None:
+            devices = jax.devices()
+            n = len(devices) if shards is None else shards
+            if n > len(devices):
+                raise ValueError(
+                    f"shards={n} but only {len(devices)} devices available")
+            mesh = jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.nshards = mesh.shape[axis]
+        self.hnsw_cfg = cfg.hnsw()
+        self.states = sharded_init(self.hnsw_cfg, mesh, axis)
+        self._step = jax.jit(make_sharded_dedup_step(
+            self.hnsw_cfg, mesh, tau=bitmap_tau(cfg), k=cfg.k, axis=axis,
+            masked=True))
+        self._seeds = hash_seeds(cfg.num_hashes, cfg.seed)
+        self._batches = 0
+        # sync-free per-shard occupancy bound (no growth path for the
+        # sharded index yet: we must refuse, not silently drop, on overflow)
+        self._known_max = 0
+        self._bound = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.hnsw_cfg.capacity * self.nshards
+
+    @property
+    def inserted(self) -> int:
+        return int(jnp.sum(self.states.count))
+
+    def signatures(self, tokens, lengths):
+        return fold_signatures(self.cfg, self._seeds, tokens, lengths)
+
+    def dedup_step(self, sigs, bitmaps, pcs, valid=None,
+                   timers=None) -> StepResult:
+        B = bitmaps.shape[0]
+        # round-robin assignment puts at most ceil(B/n) docs on one shard;
+        # sync the true per-shard max only when the bound gets close
+        per_shard = -(-B // self.nshards)
+        if self._known_max + self._bound + per_shard > self.hnsw_cfg.capacity:
+            self._known_max = int(jnp.max(self.states.count))   # host sync
+            self._bound = 0
+            if (self._known_max + per_shard) > self.hnsw_cfg.capacity:
+                raise RuntimeError(
+                    f"sharded index full: a shard holds {self._known_max} of "
+                    f"{self.hnsw_cfg.capacity} slots and the incoming batch "
+                    f"may not fit; raise fold.capacity (per shard) or add "
+                    f"shards — sharded mode has no growth path yet")
+        self._bound += per_shard
+        pad = (-B) % self.nshards
+        if valid is None:
+            valid = np.ones((B,), bool)
+        if pad:
+            bitmaps = jnp.pad(bitmaps, ((0, pad), (0, 0)))
+            pcs = jnp.pad(pcs, (0, pad))
+            valid = np.pad(np.asarray(valid), (0, pad))
+        levels = jnp.asarray(sample_levels(
+            B + pad, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
+        self._batches += 1
+        self.states, keep, keep_in = self._step(
+            self.states, bitmaps, pcs, levels, jnp.asarray(valid))
+        # the merged top-k per query is internal to the sharded program;
+        # surface the verdict with neighbor ids unknown (-1)
+        k = self.cfg.k
+        ids = jnp.full((B, k), -1, jnp.int32)
+        sims = jnp.full((B, k), -jnp.inf, jnp.float32)
+        return StepResult(keep=keep[:B], keep_in_batch=keep_in[:B],
+                          ids=ids, sims=sims)

@@ -1,0 +1,79 @@
+"""Serving metrics: counters + bounded latency reservoirs.
+
+Deliberately dependency-free (no prometheus client in the container): a
+registry of monotone counters and fixed-size sliding reservoirs good enough
+for QPS and p50/p99 batch latency. `snapshot()` is cheap and side-effect
+free except for the interval-QPS bookkeeping; exporters (logs, the demo's
+stdout table) consume the returned dict.
+"""
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+__all__ = ["MetricsRegistry"]
+
+_RESERVOIR = 4096   # latest-N window per histogram
+
+
+class _Reservoir:
+    __slots__ = ("values", "total")
+
+    def __init__(self):
+        self.values: collections.deque[float] = collections.deque(
+            maxlen=_RESERVOIR)
+        self.total = 0
+
+    def observe(self, v: float):
+        self.values.append(float(v))
+        self.total += 1
+
+    def summary(self) -> dict:
+        if not self.values:
+            return {"n": 0}
+        arr = np.asarray(self.values)
+        return {
+            "n": self.total,
+            "mean": float(arr.mean()),
+            "p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99)),
+            "max": float(arr.max()),
+        }
+
+
+class MetricsRegistry:
+    """Counters (`inc`) + latency reservoirs (`observe`, milliseconds)."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._t0 = clock()
+        self.counters: dict[str, int] = collections.defaultdict(int)
+        self.histograms: dict[str, _Reservoir] = collections.defaultdict(
+            _Reservoir)
+        self._last_snap_t = self._t0
+        self._last_docs = 0
+
+    def inc(self, name: str, n: int = 1):
+        self.counters[name] += n
+
+    def observe(self, name: str, value_ms: float):
+        self.histograms[name].observe(value_ms)
+
+    def snapshot(self) -> dict:
+        """Point-in-time view: counters, latency summaries, overall and
+        since-last-snapshot docs/sec (keyed on the `docs_out` counter)."""
+        now = self._clock()
+        uptime = max(now - self._t0, 1e-9)
+        docs = self.counters.get("docs_out", 0)
+        interval = max(now - self._last_snap_t, 1e-9)
+        qps_interval = (docs - self._last_docs) / interval
+        self._last_snap_t, self._last_docs = now, docs
+        return {
+            "uptime_s": uptime,
+            "qps": docs / uptime,
+            "qps_interval": qps_interval,
+            "counters": dict(self.counters),
+            "latency_ms": {k: h.summary() for k, h in self.histograms.items()},
+        }

@@ -1,0 +1,224 @@
+"""DedupService: the online ingestion front-end (tickets in, verdicts out).
+
+Composition of the serving subsystem:
+
+  submit(docs) ─> MicroBatcher ─> PipelinedExecutor ─> verdict store
+                  (bucketed        (depth-2 JAX async     ^
+                   coalescing)      dispatch pipeline)    │
+                        IndexManager (growth + snapshots) ┘
+
+The service is caller-driven (no background thread): `submit` pumps every
+batch the batching policy allows, `flush` forces the ragged remainder
+through and blocks until all in-flight batches materialize, and `results`
+flushes on demand when a ticket's verdicts are not yet complete. This keeps
+the whole subsystem deterministic and exception-transparent — the properties
+the equivalence tests and the Fig. 6/7 reproductions rely on — while the
+executor still overlaps host signature prep with device search/insert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, NamedTuple
+
+import numpy as np
+
+from repro.core.dedup import FoldConfig, FoldPipeline
+from repro.service.batcher import MicroBatcher
+from repro.service.executor import BatchOutcome, PipelinedExecutor
+from repro.service.index_manager import IndexManager, ShardedDedupBackend
+from repro.service.metrics import MetricsRegistry
+
+__all__ = ["ServiceConfig", "DedupService", "DocVerdict", "Ticket"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    fold: FoldConfig = dataclasses.field(default_factory=FoldConfig)
+    # micro-batching
+    max_batch: int = 128
+    max_wait_ms: float = 5.0
+    max_len: int = 512
+    len_buckets: tuple[int, ...] | None = None
+    batch_buckets: tuple[int, ...] | None = None
+    # pipelining
+    pipeline_depth: int = 2
+    # index lifecycle
+    grow_watermark: float = 0.85
+    growth_factor: float = 2.0
+    max_capacity: int | None = None
+    snapshot_dir: str | None = None
+    snapshot_every: int = 0          # batches between snapshots; 0 = off
+    max_snapshots: int = 3
+    # distribution: >1 routes onto the core/sharded multi-shard step
+    # (requires that many devices; fold.capacity is then per shard)
+    shards: int = 1
+    # fire-and-forget producers that only read stats() should disable the
+    # per-doc verdict store — it grows with every document until results()
+    # pops it, i.e. forever if nobody asks
+    record_verdicts: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DocVerdict:
+    doc_id: int
+    admitted: bool
+    reason: str            # "admitted" | "batch_dup" | "index_dup"
+    neighbor_id: int       # best retrieved neighbor (-1 = none)
+    similarity: float      # its similarity (-inf when no neighbor)
+
+
+class Ticket(NamedTuple):
+    start: int   # first doc id covered (inclusive)
+    stop: int    # last doc id covered (exclusive)
+
+
+class DedupService:
+    """Online dedup serving facade over a FoldPipeline (or sharded backend)."""
+
+    def __init__(self, cfg: ServiceConfig | None = None):
+        self.cfg = cfg = cfg or ServiceConfig()
+        if cfg.shards > 1:
+            if cfg.snapshot_dir or cfg.snapshot_every:
+                raise ValueError(
+                    "snapshots are not supported in sharded mode yet; "
+                    "unset snapshot_dir/snapshot_every or use shards=1")
+            self.backend = ShardedDedupBackend(cfg.fold, shards=cfg.shards)
+            self.index_manager = None        # per-shard capacity is fixed
+        else:
+            self.backend = FoldPipeline(cfg.fold)
+            self.index_manager = IndexManager(
+                self.backend, grow_watermark=cfg.grow_watermark,
+                growth_factor=cfg.growth_factor,
+                max_capacity=cfg.max_capacity,
+                snapshot_dir=cfg.snapshot_dir,
+                snapshot_every=cfg.snapshot_every,
+                max_snapshots=cfg.max_snapshots)
+        self.batcher = MicroBatcher(
+            max_batch=cfg.max_batch, max_wait_ms=cfg.max_wait_ms,
+            len_buckets=cfg.len_buckets, batch_buckets=cfg.batch_buckets,
+            max_len=cfg.max_len)
+        self.metrics = MetricsRegistry()
+        self.executor = PipelinedExecutor(
+            self.backend, depth=cfg.pipeline_depth,
+            on_outcome=self._record_outcome)
+        self._next_id = 0
+        self._verdicts: dict[int, DocVerdict] = {}
+
+    # ------------------------------------------------------------ ingest
+    def submit(self, docs, lengths=None) -> Ticket:
+        """Queue documents; returns a ticket covering their doc ids.
+
+        docs: either an iterable of 1-D token arrays, or a padded (N, L)
+        matrix with `lengths` (the corpus/ingest interchange format)."""
+        start = self._next_id
+        if lengths is not None:
+            docs = np.asarray(docs)
+            n = docs.shape[0]
+            self.batcher.add_many(range(start, start + n), docs, lengths)
+            self._next_id += n
+        else:
+            for d in docs:
+                self.batcher.add(self._next_id, np.asarray(d))
+                self._next_id += 1
+        self.metrics.inc("docs_in", self._next_id - start)
+        self._pump()
+        return Ticket(start, self._next_id)
+
+    def _pump(self, force: bool = False) -> None:
+        # On failure, keep the ticket contract: batches that never reached
+        # the executor go back to the queue so results() can still find
+        # them once the caller resolves the failure (e.g. raises
+        # max_capacity). A batch whose submit() raised is NOT requeued —
+        # submit appends to the in-flight deque before collecting older
+        # results, so the failure came from a downstream batch and this one
+        # will still materialize on the next flush.
+        batches = self.batcher.drain(force=force)
+        for idx, mb in enumerate(batches):
+            try:
+                if self.index_manager is not None:
+                    if self.index_manager.maybe_grow(incoming=mb.n_docs):
+                        self.metrics.inc("index_grow_events")
+                    self.index_manager.note_dispatched(mb.n_docs)
+            except Exception:
+                for later in reversed(batches[idx:]):
+                    self.batcher.requeue(later)
+                raise
+            try:
+                self.executor.submit(mb)
+            except Exception:
+                for later in reversed(batches[idx + 1:]):
+                    self.batcher.requeue(later)
+                raise
+            self.metrics.inc("batches_dispatched")
+
+    def poll(self) -> None:
+        """Give the batching clock a chance to emit an overdue partial
+        batch (callers with sparse traffic invoke this periodically)."""
+        self._pump()
+
+    def flush(self) -> None:
+        """Force everything pending through and block until materialized
+        (including any in-flight async snapshot write)."""
+        self._pump(force=True)
+        self.executor.drain()
+        if self.index_manager is not None:
+            self.index_manager.wait_snapshots()
+
+    # ------------------------------------------------------------ results
+    def _record_outcome(self, out: BatchOutcome) -> None:
+        mb = out.batch
+        self.metrics.observe("batch_ms", out.wall_s * 1e3)
+        self.metrics.inc("docs_out", mb.n_docs)
+        best = out.sims.argmax(axis=-1)
+        rows = np.arange(len(best))
+        nbr_ids = out.ids[rows, best]
+        nbr_sims = out.sims[rows, best]
+        for i in np.flatnonzero(mb.valid):
+            if out.keep[i]:
+                reason = "admitted"
+            elif not out.keep_in_batch[i]:
+                reason = "batch_dup"
+            else:
+                reason = "index_dup"
+            self.metrics.inc(reason)
+            if self.cfg.record_verdicts:
+                self._verdicts[int(mb.doc_ids[i])] = DocVerdict(
+                    doc_id=int(mb.doc_ids[i]),
+                    admitted=bool(out.keep[i]),
+                    reason=reason,
+                    neighbor_id=int(nbr_ids[i]),
+                    similarity=float(nbr_sims[i]),
+                )
+        if self.index_manager is not None:
+            self.index_manager.after_batch()
+
+    def results(self, ticket: Ticket) -> list[DocVerdict]:
+        """Per-doc verdicts for a ticket, flushing if still in flight.
+        Verdicts are handed out once (popped from the store)."""
+        if not self.cfg.record_verdicts:
+            raise RuntimeError("record_verdicts=False: this service only "
+                               "exposes aggregate stats()")
+        if any(i not in self._verdicts for i in range(*ticket)):
+            self.flush()
+        return [self._verdicts.pop(i) for i in range(*ticket)]
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        snap = self.metrics.snapshot()
+        count = self.backend.inserted       # host sync
+        snap["index"] = {
+            "count": count,
+            "capacity": self.backend.capacity,
+            "occupancy": count / max(self.backend.capacity, 1),
+            "grow_events": (self.index_manager.grow_events
+                            if self.index_manager else 0),
+            "snapshots": (self.index_manager.snapshots_taken
+                          if self.index_manager else 0),
+        }
+        snap["batching"] = {
+            "compiled_shapes": sorted(self.batcher.emitted_shapes),
+            "truncated_docs": self.batcher.truncated,
+            "pending_docs": self.batcher.pending,
+            "inflight_batches": self.executor.inflight,
+        }
+        return snap

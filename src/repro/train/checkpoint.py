@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+__all__ = ["save", "save_async", "restore", "latest_step", "list_steps",
+           "manifest", "wait_pending"]
 
 _pending: list[threading.Thread] = []
 
@@ -83,15 +84,28 @@ def _write(ckpt_dir: str, step: int, host_leaves, extra: dict):
     os.rename(tmp, final)
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def list_steps(ckpt_dir: str) -> list[int]:
+    """All committed checkpoint steps, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(ckpt_dir, name, "MANIFEST.json")):
                 steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def manifest(ckpt_dir: str, step: int) -> dict:
+    """The MANIFEST.json of a committed step (includes save-time extras)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "MANIFEST.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, step: int, like_tree, *, shardings=None):

@@ -1,0 +1,88 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+Loaded by tests/conftest.py ONLY when the real hypothesis package is not
+installed (this container has no network access for pip). It implements the
+exact subset the suite uses — `@settings(max_examples=, deadline=)`,
+`@given(...)`, and the `integers` / `floats` / `booleans` / `sampled_from`
+strategies — as deterministic seeded sweeps: each example draws from a
+`numpy` Generator keyed by (test name, example index), so failures are
+reproducible run-to-run. No shrinking, no database, no adaptive search;
+install real hypothesis (see requirements.txt) to get those back.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+class strategies:
+    """Namespace mirror of hypothesis.strategies (`import ... as st`)."""
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    booleans = staticmethod(_booleans)
+    sampled_from = staticmethod(_sampled_from)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def apply(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return apply
+
+
+def given(*strats: _Strategy):
+    def wrap(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_hyp_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                key = hashlib.sha256(
+                    f"{fn.__module__}.{fn.__qualname__}:{i}".encode()).digest()
+                rng = np.random.default_rng(int.from_bytes(key[:8], "little"))
+                drawn = [s.example_from(rng) for s in strats]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: "
+                        f"{fn.__qualname__}({', '.join(map(repr, drawn))})"
+                    ) from e
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper itself takes no test arguments
+        run.__dict__.pop("__wrapped__", None)
+        run.__signature__ = inspect.Signature()
+        return run
+    return wrap

@@ -7,3 +7,11 @@ import sys
 os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Offline containers have no hypothesis wheel; fall back to the vendored
+# API-compatible shim (deterministic seeded sweeps, no shrinking). A real
+# install (requirements.txt) always takes precedence.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_vendor"))
