@@ -16,9 +16,27 @@ import time
 
 import numpy as np
 
+from repro.core.dedup import FoldConfig
 from repro.data.corpus import DATASET_PRESETS, SyntheticCorpus
+from repro.index import make_pipeline
 
-__all__ = ["run_pipeline", "recall_fp", "DATASET_PRESETS"]
+__all__ = ["run_pipeline", "recall_fp", "build_pipeline", "DATASET_PRESETS"]
+
+# graph backends index into HNSW arrays (capacity is graph size); host
+# backends pre-allocate flat signature stores (cheap — size generously)
+_GRAPH_BACKENDS = ("hnsw", "hnsw_sharded", "hnsw_raw")
+
+
+def build_pipeline(backend: str, *, capacity: int | None = None, tau: float = 0.7,
+                   **opts):
+    """Benchmark-standard pipeline construction through the repro.index
+    registry: every backend gets the same signature stage and tau (in
+    MinHash space, the cross-backend comparison space), HNSW params scaled
+    for the CPU container."""
+    cap = capacity or (8192 if backend in _GRAPH_BACKENDS else 1 << 14)
+    cfg = FoldConfig(capacity=cap, tau=tau, ef_construction=48, ef_search=48,
+                     threshold_space="minhash")
+    return make_pipeline(backend, cfg=cfg, **opts)
 
 
 def run_pipeline(pipe, dataset: str = "common_crawl", cycles: int = 4,

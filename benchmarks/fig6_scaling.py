@@ -5,24 +5,22 @@ first->last cycle throughput and final cumulative recall vs brute force.
 """
 from __future__ import annotations
 
-from benchmarks.common import recall_fp, run_pipeline
-from repro.baselines import BruteForcePipeline, DPKPipeline, FlatLSHPipeline, RawHNSWPipeline
-from repro.core.dedup import FoldConfig, FoldPipeline
+from benchmarks.common import build_pipeline, recall_fp, run_pipeline
 
 
 def run(quick: bool = False):
     rows = []
     datasets = ["common_crawl"] if quick else ["common_crawl", "c4", "lm1b"]
     cycles, batch = (4, 256) if quick else (6, 512)
-    hn = dict(capacity=8192, ef_construction=48, ef_search=48)
     for ds in datasets:
-        ref_keep, _ = run_pipeline(BruteForcePipeline(capacity=1 << 14),
+        ref_keep, _ = run_pipeline(build_pipeline("brute"),
                                    dataset=ds, cycles=cycles, batch=batch)
         for name, mk in [
-            ("fold", lambda: FoldPipeline(FoldConfig(threshold_space="minhash", **hn))),
-            ("dpk", lambda: DPKPipeline(capacity=1 << 14)),
-            ("flat_topk4", lambda: FlatLSHPipeline(topk=4, capacity=1 << 14)),
-            ("faiss_jaccard", lambda: RawHNSWPipeline("minhash_jaccard", **hn)),
+            ("fold", lambda: build_pipeline("hnsw")),
+            ("dpk", lambda: build_pipeline("dpk")),
+            ("flat_topk4", lambda: build_pipeline("flat_lsh", topk=4)),
+            ("faiss_jaccard", lambda: build_pipeline("hnsw_raw",
+                                                     metric="minhash_jaccard")),
         ]:
             keep, stats = run_pipeline(mk(), dataset=ds, cycles=cycles,
                                        batch=batch)

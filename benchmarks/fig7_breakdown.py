@@ -2,19 +2,17 @@
 insert) and document outcomes per cycle, FOLD vs baselines."""
 from __future__ import annotations
 
-from benchmarks.common import run_pipeline
-from repro.baselines import DPKPipeline, RawHNSWPipeline
-from repro.core.dedup import FoldConfig, FoldPipeline
+from benchmarks.common import build_pipeline, run_pipeline
 
 
 def run(quick: bool = False):
     cycles, batch = (3, 256) if quick else (5, 512)
-    hn = dict(capacity=8192, ef_construction=48, ef_search=48)
     rows = []
     for name, mk in [
-        ("fold", lambda: FoldPipeline(FoldConfig(threshold_space="minhash", **hn))),
-        ("dpk", lambda: DPKPipeline(capacity=1 << 14)),
-        ("faiss_jaccard", lambda: RawHNSWPipeline("minhash_jaccard", **hn)),
+        ("fold", lambda: build_pipeline("hnsw")),
+        ("dpk", lambda: build_pipeline("dpk")),
+        ("faiss_jaccard", lambda: build_pipeline("hnsw_raw",
+                                                 metric="minhash_jaccard")),
     ]:
         keep, stats = run_pipeline(mk(), cycles=cycles, batch=batch)
         last = stats[-1]

@@ -1,10 +1,15 @@
 """Benchmark suite: one section per paper table/figure.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+        PYTHONPATH=src python -m benchmarks.run --backend KEY [--quick]
 
 Prints `name,us_per_call,derived` CSV rows per the harness contract, where
 us_per_call is the per-document processing latency of the subject system
 and `derived` carries the figure's headline metric (recall, speedup, ...).
+
+--backend runs the generic continuous-ingestion protocol for ONE registered
+repro.index backend (any key from repro.index.available()) — the smoke path
+for new backend plugins.
 """
 from __future__ import annotations
 
@@ -17,12 +22,44 @@ SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
             "dist_scaling", "service_throughput", "roofline"]
 
 
+def run_backend(name: str, quick: bool = False):
+    """Continuous-ingestion benchmark of one registry backend: per-doc
+    latency, stage breakdown, and recall vs the brute-force reference."""
+    from benchmarks.common import build_pipeline, recall_fp, run_pipeline
+    cycles, batch = (3, 256) if quick else (5, 512)
+    ref_keep, _ = run_pipeline(build_pipeline("brute"),
+                               cycles=cycles, batch=batch)
+    keep, stats = run_pipeline(build_pipeline(name),
+                               cycles=cycles, batch=batch)
+    rec, fp = recall_fp(ref_keep, keep)
+    last = stats[-1]
+    us = last["wall"] / batch * 1e6
+    # fused backends (hnsw_sharded) report one t_fused_step instead of the
+    # per-stage split — print whichever timers the pipeline recorded
+    keys = ["t_signature", "t_in_batch", "t_search", "t_insert"]
+    if last.get("t_fused_step"):
+        keys = ["t_signature", "t_fused_step"]
+    parts = ";".join(f"{k[2:]}={last.get(k, 0.0) * 1e3:.0f}ms" for k in keys)
+    return [(f"backend/{name}", round(us, 1),
+             f"recall={rec:.3f};fp={fp:.4f};{parts};"
+             f"admitted={int(keep.sum())}")]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller corpora / fewer cycles")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default=None,
+                    help="benchmark one registered repro.index backend "
+                         "instead of the paper sections")
     args = ap.parse_args()
+
+    if args.backend:
+        print("name,us_per_call,derived")
+        for r in run_backend(args.backend, quick=args.quick):
+            print(",".join(str(x) for x in r), flush=True)
+        return
 
     sections = [args.only] if args.only else SECTIONS
     print("name,us_per_call,derived")

@@ -2,35 +2,31 @@
 
 The paper runs 3M Common Crawl docs (brute force: 5 days). We run a scaled
 stream through the same protocol; recall is vs exact online brute force.
+Every pipeline is constructed through the repro.index registry — one
+generic DedupPipeline per backend key, no bespoke classes.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import recall_fp, run_pipeline
-from repro.baselines import (BruteForcePipeline, DPKPipeline, FlatLSHPipeline,
-                             PrefixFilterPipeline, RawHNSWPipeline)
-from repro.core.dedup import FoldConfig, FoldPipeline
+from benchmarks.common import build_pipeline, recall_fp, run_pipeline
 
 
 def _pipelines(quick):
-    cap = 1 << 14
-    hn = dict(capacity=8192, ef_construction=48, ef_search=48)
     return [
-        ("dpk", lambda: DPKPipeline(capacity=cap)),
-        ("prefix_filter", lambda: PrefixFilterPipeline()),
-        ("flat_topk4", lambda: FlatLSHPipeline(topk=4, capacity=cap)),
-        ("flat_topk160", lambda: FlatLSHPipeline(topk=160, capacity=cap)),
-        ("faiss_jaccard", lambda: RawHNSWPipeline("minhash_jaccard", **hn)),
-        ("faiss_hamming", lambda: RawHNSWPipeline("hamming", **hn)),
-        ("fold", lambda: FoldPipeline(FoldConfig(
-            threshold_space="minhash", **hn))),
+        ("dpk", lambda: build_pipeline("dpk")),
+        ("prefix_filter", lambda: build_pipeline("prefix_filter")),
+        ("flat_topk4", lambda: build_pipeline("flat_lsh", topk=4)),
+        ("flat_topk160", lambda: build_pipeline("flat_lsh", topk=160)),
+        ("faiss_jaccard", lambda: build_pipeline("hnsw_raw",
+                                                 metric="minhash_jaccard")),
+        ("faiss_hamming", lambda: build_pipeline("hnsw_raw",
+                                                 metric="hamming")),
+        ("fold", lambda: build_pipeline("hnsw")),
     ]
 
 
 def run(quick: bool = False):
     cycles, batch = (3, 256) if quick else (5, 512)
-    ref_keep, ref_stats = run_pipeline(BruteForcePipeline(capacity=1 << 14),
+    ref_keep, ref_stats = run_pipeline(build_pipeline("brute"),
                                        cycles=cycles, batch=batch)
     # steady-state latency: last cycle (earlier cycles pay jit compile)
     rows = [("table1/brute_force",

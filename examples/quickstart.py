@@ -4,23 +4,26 @@
 
 Streams synthetic Common-Crawl-like batches (40% near-duplicates) through
 the FOLD pipeline and prints per-cycle throughput + the recall/false-positive
-rate vs an exact brute-force reference.
+rate vs an exact brute-force reference. Both pipelines come from the
+repro.index registry — swap the "hnsw" key for "dpk", "flat_lsh",
+"prefix_filter" or "hnsw_raw" to race any baseline on the same stream.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.baselines import BruteForcePipeline
-from repro.core.dedup import FoldConfig, FoldPipeline
+from repro.core.dedup import FoldConfig
 from repro.data import DATASET_PRESETS, SyntheticCorpus
+from repro.index import make_pipeline
 
 
 def main():
     cycles, batch = 4, 512
-    fold = FoldPipeline(FoldConfig(capacity=1 << 14, ef_construction=48,
-                                   ef_search=48, threshold_space="minhash"))
-    brute = BruteForcePipeline(capacity=1 << 14)
+    cfg = FoldConfig(capacity=1 << 14, ef_construction=48, ef_search=48,
+                     threshold_space="minhash")
+    fold = make_pipeline("hnsw", cfg=cfg)
+    brute = make_pipeline("brute", cfg=cfg)
 
     def stream():
         return SyntheticCorpus(DATASET_PRESETS["common_crawl"])

@@ -68,6 +68,21 @@ def main():
           f"{sorted(os.listdir(snap_dir))}")
     assert s["index"]["grow_events"] >= 1, "demo should outgrow 2048 slots"
 
+    # --- the same serving stack over a different index organization -------
+    # ServiceConfig.backend takes any repro.index registry key; the DPK
+    # baseline below gets the identical micro-batching, pipelining, and
+    # growth watermark machinery — no code changes, one config string.
+    svc2 = DedupService(ServiceConfig(
+        fold=FoldConfig(capacity=2048), backend="dpk",
+        max_batch=128, max_wait_ms=2.0, max_len=512))
+    src2 = SyntheticCorpus(DATASET_PRESETS["common_crawl"])
+    t = svc2.submit(*src2.next_batch(512)[:2])
+    admitted = sum(v.admitted for v in svc2.results(t))
+    s2 = svc2.stats()
+    print(f"\nsame service, backend='dpk': admitted {admitted}/512, index "
+          f"{s2['index']['count']}/{s2['index']['capacity']} "
+          f"({s2['index']['backend_stats']['buckets']} LSH buckets)")
+
 
 if __name__ == "__main__":
     main()

@@ -1,17 +1,23 @@
 """Baselines from the paper's evaluation (§3, §6).
 
-All pipelines share the FOLD signature stage and expose the same
-`process_batch(tokens, lengths) -> (keep_mask, stats)` interface so the
-benchmarks compare like for like:
+Since PR 2 every baseline is a registered `repro.index` backend run through
+the one generic `DedupPipeline` — the constructors below are thin
+compatibility wrappers that map the historical keyword signatures onto
+`repro.index.make_pipeline(<key>, cfg=FoldConfig(...))`:
 
-  BruteForcePipeline   — exact online admission (Table 1 ground truth; the
-                         paper notes DPK's detection is equivalent to it)
-  DPKPipeline          — MinHash-LSH banding + Jaccard verification (IBM DPK)
-  FlatLSHPipeline      — Milvus MINHASH_LSH analogue: bucketed flat retrieval
-                         with a topK candidate budget
-  PrefixFilterPipeline — frequency-ordered prefix-filter set-similarity join
-  RawHNSWPipeline      — FAISS (Jaccard) / FAISS (Hamming): HNSW over raw
-                         MinHash signatures with the naive metric
+  BruteForcePipeline   — "brute": exact online admission (Table 1 ground
+                         truth; the paper notes DPK's detection is
+                         equivalent to it)
+  DPKPipeline          — "dpk": MinHash-LSH banding + Jaccard verification
+  FlatLSHPipeline      — "flat_lsh": Milvus MINHASH_LSH analogue (bucketed
+                         flat retrieval with a topK candidate budget)
+  PrefixFilterPipeline — "prefix_filter": frequency-ordered prefix-filter
+                         set-similarity join
+  RawHNSWPipeline      — "hnsw_raw": FAISS (Jaccard) / FAISS (Hamming)
+
+All return the same `process_batch(tokens, lengths) -> (keep_mask, stats)`
+surface (plus the shared signatures/dedup_step stage split, growth, and
+snapshots) so the benchmarks compare like for like.
 """
 from repro.baselines.base import SignatureStage
 from repro.baselines.brute import BruteForcePipeline

@@ -1,8 +1,6 @@
 """Shared signature stage + LSH banding utilities for all baselines."""
 from __future__ import annotations
 
-import time
-
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,65 +1,20 @@
 """Brute-force online admission — the exact reference (Table 1 ground truth).
 
-Per incoming document: exact MinHash-Jaccard against *every* admitted
-signature (chunked through the Pallas-backed pairwise kernel on the raw
-lanes). O(N) per doc — the 5-day column of Table 1, and the reference
-labeler for recall (the paper validates DPK as equivalent to it).
+Compatibility wrapper over `repro.index.make_pipeline("brute", ...)` — the
+implementation lives in repro/index/backends/brute.py (BruteForceBackend),
+driven by the generic DedupPipeline.
 """
 from __future__ import annotations
 
-import time
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.baselines.base import SignatureStage
-from repro.core.bitmap import pairwise_minhash_jaccard
-from repro.core.dedup import _greedy_leader
+from repro.core.dedup import FoldConfig
+from repro.index import DedupPipeline, make_pipeline
 
 __all__ = ["BruteForcePipeline"]
 
 
-class BruteForcePipeline:
-    def __init__(self, num_hashes: int = 112, shingle_n: int = 5,
-                 tau: float = 0.7, capacity: int = 1 << 20, seed: int = 0):
-        self.sig_stage = SignatureStage(num_hashes, shingle_n, seed)
-        self.tau = tau
-        self.store = np.zeros((capacity, num_hashes), np.uint32)
-        self.n = 0
-
-    def process_batch(self, tokens, lengths):
-        stats = {}
-        t0 = time.perf_counter()
-        sigs = self.sig_stage(tokens, lengths)
-        sigs.block_until_ready()
-        stats["t_signature"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        sim_in = pairwise_minhash_jaccard(sigs, sigs)
-        keep_in = np.asarray(_greedy_leader(sim_in, self.tau))
-        stats["t_in_batch"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        if self.n > 0:
-            db = jnp.asarray(self.store[:self.n])
-            dup = np.zeros(sigs.shape[0], bool)
-            # chunk the db axis to bound memory
-            for s in range(0, self.n, 8192):
-                sim = pairwise_minhash_jaccard(sigs, db[s:s + 8192])
-                dup |= np.asarray(jnp.any(sim >= self.tau, axis=1))
-        else:
-            dup = np.zeros(sigs.shape[0], bool)
-        stats["t_search"] = time.perf_counter() - t0
-
-        keep = keep_in & ~dup
-        stats["n_batch_drop"] = int((~keep_in).sum())
-        stats["n_index_drop"] = int((keep_in & dup).sum())
-        stats["n_insert"] = int(keep.sum())
-
-        t0 = time.perf_counter()
-        new = np.asarray(sigs)[keep]
-        self.store[self.n:self.n + len(new)] = new
-        self.n += len(new)
-        stats["t_insert"] = time.perf_counter() - t0
-        stats["count"] = self.n
-        return keep, stats
+def BruteForcePipeline(num_hashes: int = 112, shingle_n: int = 5,
+                       tau: float = 0.7, capacity: int = 1 << 20,
+                       seed: int = 0) -> DedupPipeline:
+    cfg = FoldConfig(num_hashes=num_hashes, shingle_n=shingle_n, tau=tau,
+                     capacity=capacity, seed=seed)
+    return make_pipeline("brute", cfg=cfg)

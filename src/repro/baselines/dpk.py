@@ -1,97 +1,20 @@
 """DPK-style MinHash-LSH pipeline (paper §2.1, Fig 1; IBM Data Prep Kit).
 
-Classic four-step flow: shingling → MinHash → LSH banding → pair
-verification. Band/row counts are calibrated to tau via the S-curve
-(H=112, tau=0.7 → 14 bands × 8 rows, threshold ≈ 0.72).
-
-`rebuild=True` (default) re-materializes the band buckets over the full
-accumulated corpus each batch — the behaviour the paper identifies as DPK's
-scalability failure ("as the dataset grows, candidate buckets shift,
-triggering re-computation with every incoming document"), producing the
-linear throughput collapse of Fig. 2/6. `rebuild=False` keeps incremental
-buckets (kinder than real DPK; useful for ablations).
-
-Verification is vectorized numpy over the candidate set (the paper also
-SIMD-accelerates DPK's verification for fairness — same spirit).
+Compatibility wrapper over `repro.index.make_pipeline("dpk", ...)` — the
+implementation lives in repro/index/backends/lsh.py (DPKBackend), driven by
+the generic DedupPipeline.
 """
 from __future__ import annotations
 
-import time
-from collections import defaultdict
-
-import numpy as np
-
-from repro.baselines.base import SignatureStage, band_keys, pick_bands
-from repro.core.bitmap import pairwise_minhash_jaccard
-from repro.core.dedup import _greedy_leader
+from repro.core.dedup import FoldConfig
+from repro.index import DedupPipeline, make_pipeline
 
 __all__ = ["DPKPipeline"]
 
 
-class DPKPipeline:
-    def __init__(self, num_hashes: int = 112, shingle_n: int = 5,
-                 tau: float = 0.7, capacity: int = 1 << 20, seed: int = 0,
-                 rebuild: bool = True):
-        self.sig_stage = SignatureStage(num_hashes, shingle_n, seed)
-        self.tau = tau
-        self.bands, self.rows = pick_bands(num_hashes, tau)
-        self.rebuild = rebuild
-        self.store = np.zeros((capacity, num_hashes), np.uint32)
-        self.keys = np.zeros((capacity, self.bands), np.uint64)
-        self.n = 0
-        self.buckets: dict[int, list[int]] = defaultdict(list)
-
-    def _candidates(self, keys_row: np.ndarray) -> np.ndarray:
-        cand: list[int] = []
-        for k in keys_row:
-            cand.extend(self.buckets.get(int(k), ()))
-        return np.unique(np.asarray(cand, dtype=np.int64))
-
-    def process_batch(self, tokens, lengths):
-        stats = {}
-        t0 = time.perf_counter()
-        sigs = self.sig_stage(tokens, lengths)
-        sigs_np = np.asarray(sigs)
-        stats["t_signature"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        keep_in = np.asarray(_greedy_leader(
-            pairwise_minhash_jaccard(sigs, sigs), self.tau))
-        stats["t_in_batch"] = time.perf_counter() - t0
-
-        # ---- candidate generation + verification against the corpus
-        t0 = time.perf_counter()
-        if self.rebuild and self.n > 0:
-            # DPK failure mode: buckets recomputed over the full corpus
-            self.buckets = defaultdict(list)
-            for i in range(self.n):
-                for k in self.keys[i]:
-                    self.buckets[int(k)].append(i)
-        qkeys = band_keys(sigs_np, self.bands, self.rows)
-        dup = np.zeros(len(sigs_np), bool)
-        for i in range(len(sigs_np)):
-            cand = self._candidates(qkeys[i])
-            if len(cand) == 0:
-                continue
-            sims = (self.store[cand] == sigs_np[i][None, :]).mean(axis=1)
-            dup[i] = bool((sims >= self.tau).any())
-        stats["t_search"] = time.perf_counter() - t0
-
-        keep = keep_in & ~dup
-        stats["n_batch_drop"] = int((~keep_in).sum())
-        stats["n_index_drop"] = int((keep_in & dup).sum())
-        stats["n_insert"] = int(keep.sum())
-
-        t0 = time.perf_counter()
-        new_idx = np.flatnonzero(keep)
-        rows = np.arange(self.n, self.n + len(new_idx))
-        self.store[rows] = sigs_np[new_idx]
-        self.keys[rows] = qkeys[new_idx]
-        if not self.rebuild:
-            for r in rows:
-                for k in self.keys[r]:
-                    self.buckets[int(k)].append(int(r))
-        self.n += len(new_idx)
-        stats["t_insert"] = time.perf_counter() - t0
-        stats["count"] = self.n
-        return keep, stats
+def DPKPipeline(num_hashes: int = 112, shingle_n: int = 5, tau: float = 0.7,
+                capacity: int = 1 << 20, seed: int = 0,
+                rebuild: bool = True) -> DedupPipeline:
+    cfg = FoldConfig(num_hashes=num_hashes, shingle_n=shingle_n, tau=tau,
+                     capacity=capacity, seed=seed)
+    return make_pipeline("dpk", cfg=cfg, rebuild=rebuild)

@@ -1,82 +1,20 @@
 """Milvus MINHASH_LSH analogue: flat bucketed retrieval with a topK budget.
 
-Incremental band buckets (no rebuild — Milvus maintains its index), but
-candidate retrieval is *budgeted*: at most `topk` candidates are verified
-per query (Milvus' topK knob — the paper's Table 1 shows topK=4 vs topK=160
-trading recall for throughput). Candidates beyond the budget are silently
-dropped, which is exactly the recall failure mode the paper describes:
-"a small candidate budget can miss near-duplicates outside the searched
-buckets, while a larger budget increases verification work".
+Compatibility wrapper over `repro.index.make_pipeline("flat_lsh", ...)` —
+the implementation lives in repro/index/backends/lsh.py (FlatLSHBackend),
+driven by the generic DedupPipeline.
 """
 from __future__ import annotations
 
-import time
-from collections import defaultdict
-
-import numpy as np
-
-from repro.baselines.base import SignatureStage, band_keys, pick_bands
-from repro.core.bitmap import pairwise_minhash_jaccard
-from repro.core.dedup import _greedy_leader
+from repro.core.dedup import FoldConfig
+from repro.index import DedupPipeline, make_pipeline
 
 __all__ = ["FlatLSHPipeline"]
 
 
-class FlatLSHPipeline:
-    def __init__(self, num_hashes: int = 112, shingle_n: int = 5,
-                 tau: float = 0.7, topk: int = 4, capacity: int = 1 << 20,
-                 seed: int = 0):
-        self.sig_stage = SignatureStage(num_hashes, shingle_n, seed)
-        self.tau = tau
-        self.topk = topk
-        self.bands, self.rows = pick_bands(num_hashes, tau)
-        self.store = np.zeros((capacity, num_hashes), np.uint32)
-        self.n = 0
-        self.buckets: dict[int, list[int]] = defaultdict(list)
-
-    def process_batch(self, tokens, lengths):
-        stats = {}
-        t0 = time.perf_counter()
-        sigs = self.sig_stage(tokens, lengths)
-        sigs_np = np.asarray(sigs)
-        stats["t_signature"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        keep_in = np.asarray(_greedy_leader(
-            pairwise_minhash_jaccard(sigs, sigs), self.tau))
-        stats["t_in_batch"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        qkeys = band_keys(sigs_np, self.bands, self.rows)
-        dup = np.zeros(len(sigs_np), bool)
-        for i in range(len(sigs_np)):
-            cand: list[int] = []
-            for k in qkeys[i]:
-                bucket = self.buckets.get(int(k))
-                if bucket:
-                    cand.extend(bucket)
-                    if len(cand) >= self.topk:
-                        break
-            if not cand:
-                continue
-            cand = np.unique(np.asarray(cand[: self.topk], dtype=np.int64))
-            sims = (self.store[cand] == sigs_np[i][None, :]).mean(axis=1)
-            dup[i] = bool((sims >= self.tau).any())
-        stats["t_search"] = time.perf_counter() - t0
-
-        keep = keep_in & ~dup
-        stats["n_batch_drop"] = int((~keep_in).sum())
-        stats["n_index_drop"] = int((keep_in & dup).sum())
-        stats["n_insert"] = int(keep.sum())
-
-        t0 = time.perf_counter()
-        new_idx = np.flatnonzero(keep)
-        rows = np.arange(self.n, self.n + len(new_idx))
-        self.store[rows] = sigs_np[new_idx]
-        for r, i in zip(rows, new_idx):
-            for k in qkeys[i]:
-                self.buckets[int(k)].append(int(r))
-        self.n += len(new_idx)
-        stats["t_insert"] = time.perf_counter() - t0
-        stats["count"] = self.n
-        return keep, stats
+def FlatLSHPipeline(num_hashes: int = 112, shingle_n: int = 5,
+                    tau: float = 0.7, topk: int = 4, capacity: int = 1 << 20,
+                    seed: int = 0) -> DedupPipeline:
+    cfg = FoldConfig(num_hashes=num_hashes, shingle_n=shingle_n, tau=tau,
+                     capacity=capacity, seed=seed)
+    return make_pipeline("flat_lsh", cfg=cfg, topk=topk)

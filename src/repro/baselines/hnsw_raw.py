@@ -1,81 +1,28 @@
 """FAISS (Jaccard) / FAISS (Hamming) analogues: HNSW over *raw* MinHash
 signatures with the naive metric (paper §3.2).
 
-Identical index machinery to FOLD (core/hnsw.py) — the only change is the
-vertex representation and distance: raw (H,) uint32 signatures scored by
-  - minhash_jaccard: 1 - fraction of equal lanes (tie-heavy; low recall), or
-  - hamming: bit flips across the packed signature (fast; misaligned).
-This isolates the contribution of the bitmap representation exactly as the
-paper's FAISS baselines do.
+Compatibility wrapper over `repro.index.make_pipeline("hnsw_raw", ...)` —
+the implementation lives in repro/index/backends/hnsw.py (RawHNSWBackend),
+driven by the generic DedupPipeline. Identical index machinery to FOLD —
+the only change is the vertex representation and distance, isolating the
+contribution of the bitmap representation exactly as the paper's FAISS
+baselines do.
 """
 from __future__ import annotations
 
-import time
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.baselines.base import SignatureStage
-from repro.core.bitmap import pairwise_hamming, pairwise_minhash_jaccard
-from repro.core.dedup import _greedy_leader
-from repro.core.hnsw import (HNSWConfig, hnsw_init, hnsw_insert_batch,
-                             hnsw_search, sample_levels)
+from repro.core.dedup import FoldConfig
+from repro.index import DedupPipeline, make_pipeline
 
 __all__ = ["RawHNSWPipeline"]
 
 
-class RawHNSWPipeline:
-    def __init__(self, metric: str = "minhash_jaccard", num_hashes: int = 112,
-                 shingle_n: int = 5, tau: float = 0.7, k: int = 4,
-                 capacity: int = 65536, M: int = 16, M0: int = 32,
-                 ef_construction: int = 64, ef_search: int = 64,
-                 max_level: int = 4, seed: int = 0):
-        assert metric in ("minhash_jaccard", "hamming")
-        self.metric = metric
-        self.sig_stage = SignatureStage(num_hashes, shingle_n, seed)
-        self.tau = tau
-        self.k = k
-        self.cfg = HNSWConfig(capacity=capacity, words=num_hashes, M=M, M0=M0,
-                              ef_construction=ef_construction,
-                              ef_search=ef_search, max_level=max_level,
-                              metric=metric)
-        self.state = hnsw_init(self.cfg)
-        self.seed = seed
-        self._inserted = 0
-
-    def process_batch(self, tokens, lengths):
-        stats = {}
-        t0 = time.perf_counter()
-        sigs = self.sig_stage(tokens, lengths)
-        sigs.block_until_ready()
-        stats["t_signature"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        if self.metric == "minhash_jaccard":
-            sim = pairwise_minhash_jaccard(sigs, sigs)
-        else:
-            sim = pairwise_hamming(sigs, sigs)
-        keep_in = np.asarray(_greedy_leader(sim, self.tau))
-        stats["t_in_batch"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        ids, sims = hnsw_search(self.cfg, self.state, sigs, k=self.k)
-        dup = np.asarray(jnp.any(sims >= self.tau, axis=-1))
-        stats["t_search"] = time.perf_counter() - t0
-
-        keep = keep_in & ~dup
-        stats["n_batch_drop"] = int((~keep_in).sum())
-        stats["n_index_drop"] = int((keep_in & dup).sum())
-        stats["n_insert"] = int(keep.sum())
-
-        t0 = time.perf_counter()
-        levels = jnp.asarray(sample_levels(tokens.shape[0], self.cfg,
-                                           seed=self._inserted + self.seed + 1))
-        pcs = jnp.zeros(tokens.shape[0], jnp.int32)  # unused by raw metrics
-        self.state = hnsw_insert_batch(self.cfg, self.state, sigs, pcs,
-                                       levels, jnp.asarray(keep))
-        self.state.count.block_until_ready()
-        self._inserted += int(keep.sum())
-        stats["t_insert"] = time.perf_counter() - t0
-        stats["count"] = int(self.state.count)
-        return keep, stats
+def RawHNSWPipeline(metric: str = "minhash_jaccard", num_hashes: int = 112,
+                    shingle_n: int = 5, tau: float = 0.7, k: int = 4,
+                    capacity: int = 65536, M: int = 16, M0: int = 32,
+                    ef_construction: int = 64, ef_search: int = 64,
+                    max_level: int = 4, seed: int = 0) -> DedupPipeline:
+    cfg = FoldConfig(num_hashes=num_hashes, shingle_n=shingle_n, tau=tau,
+                     k=k, capacity=capacity, M=M, M0=M0,
+                     ef_construction=ef_construction, ef_search=ef_search,
+                     max_level=max_level, seed=seed)
+    return make_pipeline("hnsw_raw", cfg=cfg, metric=metric)

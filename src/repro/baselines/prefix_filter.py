@@ -1,103 +1,20 @@
 """Prefix-filter set-similarity join (paper baseline; Xiao et al., Vernica
 et al.).
 
-Documents are 5-word shingle-hash *sets* (no MinHash sketching). Shingles
-are globally ordered by ascending frequency ("rare first"); a document with
-|s| shingles indexes its first p = |s| - ceil(tau * |s|) + 1 prefix tokens.
-Two documents can only reach Jaccard >= tau if their prefixes intersect, so
-candidates come from an inverted index over prefix tokens, then exact
-set-Jaccard verifies. Evolving token frequencies and growing candidate sets
-make this the slowest baseline at scale (paper Fig. 2) — reproduced here
-deliberately: this pipeline is host-side Python by nature.
+Compatibility wrapper over `repro.index.make_pipeline("prefix_filter", ...)`
+— the implementation lives in repro/index/backends/prefix.py
+(PrefixFilterBackend), driven by the generic DedupPipeline with the
+join-style INDEX_FIRST admission order.
 """
 from __future__ import annotations
 
-import math
-import time
-from collections import Counter, defaultdict
-
-import numpy as np
-
-from repro.core.hashing import UINT32_MAX
-from repro.core.shingle import shingle_hashes
+from repro.core.dedup import FoldConfig
+from repro.index import DedupPipeline, make_pipeline
 
 __all__ = ["PrefixFilterPipeline"]
 
 
-class PrefixFilterPipeline:
-    def __init__(self, shingle_n: int = 5, tau: float = 0.7, seed: int = 0):
-        self.shingle_n = shingle_n
-        self.tau = tau
-        self.freq: Counter = Counter()
-        self.sets: list[frozenset] = []
-        self.inverted: dict[int, list[int]] = defaultdict(list)
-
-    def _shingle_sets(self, tokens, lengths):
-        import jax.numpy as jnp
-        sh = np.asarray(shingle_hashes(jnp.asarray(tokens, jnp.uint32),
-                                       jnp.asarray(lengths, jnp.int32),
-                                       self.shingle_n))
-        out = []
-        for row in sh:
-            out.append(frozenset(int(x) for x in row if x != 0xFFFFFFFF))
-        return out
-
-    def _prefix(self, s: frozenset) -> list[int]:
-        if not s:
-            return []
-        ordered = sorted(s, key=lambda t: (self.freq[t], t))
-        p = len(s) - math.ceil(self.tau * len(s)) + 1
-        return ordered[:max(p, 1)]
-
-    @staticmethod
-    def _jaccard(a: frozenset, b: frozenset) -> float:
-        if not a and not b:
-            return 1.0
-        return len(a & b) / len(a | b)
-
-    def process_batch(self, tokens, lengths):
-        stats = {}
-        t0 = time.perf_counter()
-        sets = self._shingle_sets(tokens, lengths)
-        stats["t_signature"] = time.perf_counter() - t0
-
-        # in-batch + corpus dedup in one sequential pass (join semantics)
-        t0 = time.perf_counter()
-        keep = np.zeros(len(sets), bool)
-        batch_admitted: list[int] = []
-        n_batch_drop = n_index_drop = 0
-        t_search = 0.0
-        for i, s in enumerate(sets):
-            ts = time.perf_counter()
-            cand_ids = set()
-            for tok in self._prefix(s):
-                cand_ids.update(self.inverted.get(tok, ()))
-            dup_corpus = any(self._jaccard(s, self.sets[j]) >= self.tau
-                             for j in cand_ids)
-            t_search += time.perf_counter() - ts
-            dup_batch = any(self._jaccard(s, sets[j]) >= self.tau
-                            for j in batch_admitted)
-            if dup_batch:
-                n_batch_drop += 1
-            elif dup_corpus:
-                n_index_drop += 1
-            else:
-                keep[i] = True
-                batch_admitted.append(i)
-        stats["t_in_batch"] = time.perf_counter() - t0 - t_search
-        stats["t_search"] = t_search
-
-        t0 = time.perf_counter()
-        for i in np.flatnonzero(keep):
-            s = sets[i]
-            self.freq.update(s)
-            doc_id = len(self.sets)
-            self.sets.append(s)
-            for tok in self._prefix(s):
-                self.inverted[tok].append(doc_id)
-        stats["t_insert"] = time.perf_counter() - t0
-        stats["n_batch_drop"] = n_batch_drop
-        stats["n_index_drop"] = n_index_drop
-        stats["n_insert"] = int(keep.sum())
-        stats["count"] = len(self.sets)
-        return keep, stats
+def PrefixFilterPipeline(shingle_n: int = 5, tau: float = 0.7,
+                         seed: int = 0) -> DedupPipeline:
+    cfg = FoldConfig(shingle_n=shingle_n, tau=tau, seed=seed)
+    return make_pipeline("prefix_filter", cfg=cfg)

@@ -8,6 +8,14 @@
   ④ threshold filter        drop if any neighbor similarity >= tau
   ⑤ admit uniques           insert survivors into the HNSW index
 
+Since PR 2 the workflow itself is generic: steps ①②④ live in
+repro.index.pipeline.DedupPipeline, the FOLD-specific index (③⑤ over
+bitmap HNSW) is repro.index.backends.hnsw.HNSWBitmapBackend, and every
+baseline from the paper's evaluation is a sibling backend behind the same
+`repro.index` protocol. `FoldPipeline` below is the canonical composition
+of the two — same construction, same stage functions, same stats — kept
+here as the paper-facing entry point.
+
 Thresholds. The paper applies a fixed tau (0.7) directly to the bitmap
 similarity. Folding compresses scores: for lane-agreement J the bitmap
 similarity concentrates near J/(2-J) (shared lanes set shared bits; disjoint
@@ -24,27 +32,25 @@ breakdown without instrumenting internals.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
-from typing import Any, NamedTuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import bitmap as bm
-from repro.core.hashing import hash_seeds
-from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_grow, hnsw_init,
-                             hnsw_insert_batch, hnsw_search, sample_levels)
+from repro.core.hnsw import HNSWConfig
 from repro.core.shingle import shingle_hashes
+from repro.index.pipeline import DedupPipeline, greedy_leader
+from repro.index.protocol import StepResult
 from repro.kernels import ops
 
 __all__ = ["FoldConfig", "FoldPipeline", "StepResult", "fold_signatures",
-           "in_batch_dedup", "bitmap_tau"]
+           "in_batch_dedup", "bitmap_tau", "greedy_leader"]
 
 
 @dataclasses.dataclass(frozen=True)
 class FoldConfig:
+    """Shared pipeline config: signature params, tau, capacity and seed are
+    meaningful to every registered backend; bitmap/HNSW fields are consumed
+    by the index organizations that use them."""
     # signatures (paper defaults)
     num_hashes: int = 112
     shingle_n: int = 5
@@ -85,20 +91,9 @@ def bitmap_tau(cfg: FoldConfig) -> float:
     raise ValueError(cfg.threshold_space)
 
 
-@functools.partial(jax.jit, static_argnames=("tau",))
-def _greedy_leader(sim: jnp.ndarray, tau: float) -> jnp.ndarray:
-    """Exact sequential in-batch dedup over a (B, B) similarity matrix.
-
-    keep[i] = no kept j < i with sim[i, j] >= tau. O(B) fori over rows.
-    """
-    B = sim.shape[0]
-    idx = jnp.arange(B)
-
-    def body(i, keep):
-        hit = jnp.any((sim[i] >= tau) & keep & (idx < i))
-        return keep.at[i].set(~hit)
-
-    return jax.lax.fori_loop(0, B, body, jnp.ones((B,), jnp.bool_))
+# promoted to repro.index.pipeline.greedy_leader in PR 2; the old private
+# name is kept as an alias for any out-of-tree importers
+_greedy_leader = greedy_leader
 
 
 def in_batch_dedup(bitmaps: jnp.ndarray, pcs: jnp.ndarray, tau: float,
@@ -107,15 +102,16 @@ def in_batch_dedup(bitmaps: jnp.ndarray, pcs: jnp.ndarray, tau: float,
     sim = ops.bitmap_jaccard(bitmaps, bitmaps, pcs if cached else None,
                              pcs if cached else None,
                              cached=cached, use_kernel=use_kernel)
-    return _greedy_leader(sim, tau)
+    return greedy_leader(sim, tau)
 
 
 def fold_signatures(cfg: FoldConfig, seeds, tokens, lengths):
     """Step ①, stateless: shingle → MinHash → bitmap (+ cached popcounts).
 
     Dispatches device work and returns immediately (arrays are futures
-    under JAX async dispatch). Shared by FoldPipeline and the sharded
-    serving backend — neither needs index state for signatures."""
+    under JAX async dispatch). Kept for callers that drive the stages by
+    hand (e.g. examples/distributed_dedup.py); pipeline users get the same
+    graph from DedupPipeline.signatures."""
     sh = shingle_hashes(jnp.asarray(tokens, jnp.uint32),
                         jnp.asarray(lengths, jnp.int32), cfg.shingle_n)
     sigs = ops.minhash(sh, seeds, use_kernel=cfg.use_kernel)
@@ -124,205 +120,31 @@ def fold_signatures(cfg: FoldConfig, seeds, tokens, lengths):
     return sigs, bitmaps, pcs
 
 
-class StepResult(NamedTuple):
-    """Device-side outcome of one dedup_step (no host sync implied).
+class FoldPipeline(DedupPipeline):
+    """The FOLD workflow: generic DedupPipeline over the bitmap-HNSW backend
+    (`repro.index.make_pipeline("hnsw", cfg=...)` builds the identical
+    object). Adds paper-facing accessors for the index internals."""
 
-    keep           (B,) bool — admit mask (in-batch ∧ index ∧ valid)
-    keep_in_batch  (B,) bool — step-② survivors (False = in-batch duplicate)
-    ids            (B, k) int32 — retrieved neighbor ids (-1 = none)
-    sims           (B, k) f32 — similarities in the active threshold space
-    """
-    keep: jnp.ndarray
-    keep_in_batch: jnp.ndarray
-    ids: jnp.ndarray
-    sims: jnp.ndarray
-
-
-class FoldPipeline:
-    """Host-side orchestration of the FOLD workflow over an evolving corpus.
-
-    Holds the HNSW index state plus (optionally) the raw MinHash signatures
-    of admitted docs for the beyond-paper exact-verify option. All heavy
-    compute is jitted. The workflow is exposed as two reusable stage
-    functions — `signatures` (step ①, host prep + device dispatch) and
-    `dedup_step` (steps ②-⑤, pure device graph) — so the serving layer
-    (repro.service.executor) can pipeline batch i+1's signature prep under
-    batch i's search/insert via JAX async dispatch. `process_batch` composes
-    the two with blocking per-stage timers, preserving the Fig. 7 breakdown.
-    """
-
-    def __init__(self, cfg: FoldConfig):
-        self.cfg = cfg
-        self.hnsw_cfg = cfg.hnsw()
-        self.state: HNSWState = hnsw_init(self.hnsw_cfg)
-        self.seeds = hash_seeds(cfg.num_hashes, cfg.seed)
-        self.tau_b = bitmap_tau(cfg)
-        self._sig_store = (np.zeros((cfg.capacity, cfg.num_hashes), np.uint32)
-                           if cfg.verify_minhash else None)
-        self._batches = 0     # level-seed basis: monotone, sync-free
+    def __init__(self, cfg: FoldConfig | None = None):
+        from repro.index.backends.hnsw import HNSWBitmapBackend
+        super().__init__(HNSWBitmapBackend(cfg or FoldConfig()))
 
     @property
-    def inserted(self) -> int:
-        """Admitted-document count (host sync: reads the device scalar)."""
-        return int(self.state.count)
+    def cfg(self) -> FoldConfig:
+        return self.backend.cfg
 
     @property
-    def capacity(self) -> int:
-        return self.hnsw_cfg.capacity
+    def hnsw_cfg(self) -> HNSWConfig:
+        return self.backend.hnsw_cfg
 
-    # -- index lifecycle -----------------------------------------------------
-    def grow(self, new_capacity: int):
-        """Re-pad the index to a larger capacity (graph preserved exactly).
+    @property
+    def state(self):
+        return self.backend.state
 
-        Recompiles search/insert once per growth; geometric growth policy
-        lives in repro.service.index_manager."""
-        self.hnsw_cfg, self.state = hnsw_grow(self.hnsw_cfg, self.state,
-                                              new_capacity)
-        self.cfg = dataclasses.replace(self.cfg, capacity=new_capacity)
-        if self._sig_store is not None and len(self._sig_store) < new_capacity:
-            pad = new_capacity - len(self._sig_store)
-            self._sig_store = np.concatenate(
-                [self._sig_store,
-                 np.zeros((pad, self.cfg.num_hashes), np.uint32)])
-        return self
+    @property
+    def tau_b(self) -> float:
+        return self.backend.tau_b
 
-    # -- fault tolerance -----------------------------------------------------
-    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
-        """Checkpoint the evolving index (HNSWState is a pytree) so corpus
-        construction survives restarts alongside training state.
-
-        async_write=True snapshots to host synchronously and writes in a
-        background thread (checkpoint.save_async) — the serving layer uses
-        this so periodic snapshots don't stall the dispatch pipeline on
-        disk I/O. Callers order writes with checkpoint.wait_pending()."""
-        from repro.train import checkpoint as ckpt
-        tree = {"state": self.state, "inserted": jnp.int32(self.inserted),
-                "batches": jnp.int32(self._batches)}
-        if self._sig_store is not None:
-            tree["sig_store"] = jnp.asarray(self._sig_store)
-        writer = ckpt.save_async if async_write else ckpt.save
-        writer(ckpt_dir, step, tree,
-               extra={"capacity": self.hnsw_cfg.capacity})
-
-    def restore(self, ckpt_dir: str, step: int | None = None):
-        from repro.train import checkpoint as ckpt
-        step = ckpt.latest_step(ckpt_dir) if step is None else step
-        assert step is not None, "no committed checkpoint found"
-        meta = ckpt.manifest(ckpt_dir, step)
-        cap = int(meta.get("capacity", self.hnsw_cfg.capacity))
-        target = max(cap, self.hnsw_cfg.capacity)
-        if cap != self.hnsw_cfg.capacity:
-            # rebuild containers at the snapshot's capacity so array shapes
-            # match the checkpoint (a snapshot may be smaller than the
-            # configured capacity — e.g. taken before a config bump); grown
-            # back to the configured size after the load
-            self.hnsw_cfg = self.hnsw_cfg._replace(capacity=cap)
-            self.cfg = dataclasses.replace(self.cfg, capacity=cap)
-            self.state = hnsw_init(self.hnsw_cfg)
-            if self._sig_store is not None:
-                self._sig_store = np.zeros((cap, self.cfg.num_hashes),
-                                           np.uint32)
-        tree = {"state": self.state, "inserted": jnp.int32(0),
-                "batches": jnp.int32(0)}
-        if self._sig_store is not None:
-            tree["sig_store"] = jnp.asarray(self._sig_store)
-        got = ckpt.restore(ckpt_dir, step, tree)
-        self.state = got["state"]
-        self._batches = int(got["batches"])
-        if self._sig_store is not None:
-            self._sig_store = np.asarray(got["sig_store"])
-        if target > cap:
-            self.grow(target)
-        return step
-
-    # -- step ① ------------------------------------------------------------
-    def signatures(self, tokens: jnp.ndarray, lengths: jnp.ndarray):
-        """shingle → MinHash → bitmap (async; see fold_signatures)."""
-        return fold_signatures(self.cfg, self.seeds, tokens, lengths)
-
-    # -- steps ②-⑤ ----------------------------------------------------------
-    def dedup_step(self, sigs, bitmaps, pcs, valid=None,
-                   timers: dict[str, Any] | None = None) -> StepResult:
-        """In-batch cleanup, index search, threshold filter, admit uniques.
-
-        valid: optional (B,) bool — False rows are shape padding from the
-        micro-batcher: they take part in nothing observable (padding rows
-        sit at the END of the batch, so the greedy in-batch sweep cannot
-        drop a real doc on their account) and are never admitted.
-
-        timers: pass a dict to run in blocking mode — per-stage wall-clock
-        is recorded under t_in_batch / t_search / t_insert (Fig. 7 hooks).
-        Without it the whole step is dispatched asynchronously: nothing
-        blocks the host, letting the executor overlap the next batch's
-        signature stage with this step's device execution.
-        """
-        cfg = self.cfg
-        block = timers is not None
-
-        t0 = time.perf_counter()
-        keep_in_batch = in_batch_dedup(bitmaps, pcs, self.tau_b,
-                                       cfg.use_kernel, cfg.cached)
-        if block:
-            keep_in_batch.block_until_ready()
-            timers["t_in_batch"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        ids, sims = hnsw_search(self.hnsw_cfg, self.state, bitmaps, k=cfg.k)
-        if cfg.verify_minhash:
-            # beyond-paper: rescore the k candidates with exact lane
-            # agreement (host sync: reads ids + the numpy signature store)
-            cand = self._sig_store[np.maximum(np.asarray(ids), 0)]  # (B,k,H)
-            lane = (np.asarray(sigs)[:, None, :] == cand).mean(-1)
-            sims = jnp.where(jnp.asarray(ids) >= 0,
-                             jnp.asarray(lane, jnp.float32), -jnp.inf)
-            dup_index = jnp.any(sims >= cfg.tau, axis=-1)
-        else:
-            dup_index = jnp.any(sims >= self.tau_b, axis=-1)
-        if block:
-            dup_index.block_until_ready()
-            timers["t_search"] = time.perf_counter() - t0
-
-        keep = keep_in_batch & ~dup_index
-        if valid is not None:
-            keep = keep & jnp.asarray(valid)
-
-        t0 = time.perf_counter()
-        B = bitmaps.shape[0]
-        levels = jnp.asarray(sample_levels(B, self.hnsw_cfg,
-                                           seed=self._batches + cfg.seed + 1))
-        self._batches += 1
-        if cfg.verify_minhash:
-            # host-side store append must know the pre-insert count (sync)
-            start = self.inserted
-            keep_np = np.asarray(keep)
-            order = np.flatnonzero(keep_np)
-            self._sig_store[start:start + len(order)] = np.asarray(sigs)[order]
-        self.state = hnsw_insert_batch(self.hnsw_cfg, self.state, bitmaps,
-                                       pcs, levels, keep)
-        if block:
-            self.state.count.block_until_ready()
-            timers["t_insert"] = time.perf_counter() - t0
-        return StepResult(keep=keep, keep_in_batch=keep_in_batch,
-                          ids=ids, sims=sims)
-
-    def process_batch(self, tokens, lengths) -> tuple[np.ndarray, dict[str, Any]]:
-        """Dedup one incoming batch. Returns (keep_mask (B,), stats).
-
-        Blocking composition of the two stage functions; per-stage timing
-        and admit/drop accounting preserved for the Fig. 7 breakdown."""
-        stats: dict[str, Any] = {}
-
-        t0 = time.perf_counter()
-        sigs, bitmaps, pcs = self.signatures(tokens, lengths)
-        pcs.block_until_ready()
-        stats["t_signature"] = time.perf_counter() - t0
-
-        res = self.dedup_step(sigs, bitmaps, pcs, timers=stats)
-
-        keep = np.asarray(res.keep)
-        keep_in_batch = np.asarray(res.keep_in_batch)
-        stats["n_batch_drop"] = int((~keep_in_batch).sum())
-        stats["n_index_drop"] = int((keep_in_batch & ~keep).sum())
-        stats["n_insert"] = int(keep.sum())
-        stats["count"] = int(self.state.count)
-        return keep, stats
+    @property
+    def seeds(self):
+        return self._seeds

@@ -35,7 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_init,
                              hnsw_insert_batch, hnsw_search)
-from repro.core.dedup import _greedy_leader
+from repro.index.pipeline import greedy_leader
 from repro.kernels import ref as kref
 
 __all__ = ["sharded_init", "make_sharded_dedup_step", "sharded_state_specs"]
@@ -88,7 +88,7 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
         # (2) in-batch dedup — block-chunked pairwise (no (B,B,W) temp)
         from repro.core.bitmap import chunked_pairwise_bitmap_jaccard
         sim_in = chunked_pairwise_bitmap_jaccard(q, q, pc, pc)
-        keep_in = _greedy_leader(sim_in, tau)
+        keep_in = greedy_leader(sim_in, tau)
         # (3) local sub-graph search for all queries
         ids, sims = hnsw_search(cfg, state, q, k=k, query_chunk=query_chunk)
         # (4) merge top-k across shards: max similarity is all we need

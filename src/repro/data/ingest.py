@@ -14,7 +14,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dedup import FoldConfig, FoldPipeline
+from repro.core.dedup import FoldConfig
+from repro.index import make_pipeline
 
 __all__ = ["DedupIngest", "PackedBatches"]
 
@@ -22,23 +23,26 @@ __all__ = ["DedupIngest", "PackedBatches"]
 class DedupIngest:
     """Dedup stage of the data pipeline, in one of two modes.
 
-    Direct (default): a private FoldPipeline, one blocking process_batch per
-    raw batch — simple, per-stage-timed, the Fig. 7 measurement path.
+    Direct (default): a private DedupPipeline over any registered
+    `repro.index` backend (default "hnsw" — the FOLD pipeline), one
+    blocking process_batch per raw batch — simple, per-stage-timed, the
+    Fig. 7 measurement path.
 
     Service-backed: pass a repro.service.DedupService and raw batches are
     submitted through its micro-batcher + pipelined executor instead —
     ingestion shares the serving layer's shape bucketing, index growth and
     snapshot rotation, and overlaps signature prep with index work. The
     service may also be shared with other producers (its doc ids stay
-    globally unique).
+    globally unique); its own `backend` config key picks the index.
     """
 
     def __init__(self, source, fold_cfg: FoldConfig | None = None,
-                 service=None):
+                 service=None, backend: str = "hnsw", **backend_opts):
         self.source = source
         self.service = service
-        self.pipe = (service.backend if service is not None
-                     else FoldPipeline(fold_cfg or FoldConfig()))
+        self.pipe = (service.pipeline if service is not None
+                     else make_pipeline(backend, cfg=fold_cfg or FoldConfig(),
+                                        **backend_opts))
         self.total_in = 0
         self.total_admitted = 0
 

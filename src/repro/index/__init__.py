@@ -1,0 +1,32 @@
+"""repro.index — the pluggable dedup-backend API.
+
+One protocol (`DedupBackend`), one registry (`register` / `make` /
+`make_pipeline` / `available`), one generic online pipeline
+(`DedupPipeline`). Every competitor from the paper's evaluation is a
+registered backend behind the same admission loop:
+
+  hnsw           FOLD: HNSW over one-hot-folded bitmaps (paper §4)
+  hnsw_sharded   FOLD sharded across the device mesh (one sub-graph/device)
+  hnsw_raw       FAISS analogues: HNSW over raw MinHash lanes
+                 (metric="minhash_jaccard" | "hamming", paper §3.2)
+  dpk            IBM Data-Prep-Kit-style MinHash-LSH banding (§2.1)
+  flat_lsh       Milvus MINHASH_LSH analogue: budgeted flat retrieval
+  prefix_filter  frequency-ordered prefix-filter set-similarity join
+  brute          exact online admission (Table 1 ground truth / recall ref)
+
+The serving layer (`repro.service.DedupService(ServiceConfig(backend=...))`),
+the benchmarks (`python -m benchmarks.run --backend ...`), and training
+ingestion all construct pipelines through this registry, so a new ~100-line
+backend immediately gets micro-batching, pipelined execution, capacity
+growth, and snapshot rotation for free.
+"""
+from repro.index.pipeline import (DedupPipeline, greedy_leader,  # noqa: F401
+                                  greedy_leader_split)
+from repro.index.protocol import (BATCH_FIRST, INDEX_FIRST,  # noqa: F401
+                                  DedupBackend, SigBatch, SigSpec, StepResult)
+from repro.index.registry import available, make, make_pipeline, register  # noqa: F401
+
+__all__ = ["DedupBackend", "SigBatch", "SigSpec", "StepResult",
+           "BATCH_FIRST", "INDEX_FIRST", "DedupPipeline", "greedy_leader",
+           "greedy_leader_split", "register", "make", "make_pipeline",
+           "available"]

@@ -1,0 +1,15 @@
+"""Built-in backend implementations; importing this package registers them.
+
+Keys: hnsw, hnsw_sharded, hnsw_raw, dpk, flat_lsh, prefix_filter, brute.
+Imported lazily by repro.index.registry on first make()/available() so the
+protocol/pipeline layer stays import-cycle-free with repro.core.dedup.
+"""
+from repro.index.backends.brute import BruteForceBackend  # noqa: F401
+from repro.index.backends.hnsw import HNSWBitmapBackend, RawHNSWBackend  # noqa: F401
+from repro.index.backends.lsh import DPKBackend, FlatLSHBackend  # noqa: F401
+from repro.index.backends.prefix import PrefixFilterBackend  # noqa: F401
+from repro.index.backends.sharded import ShardedDedupBackend  # noqa: F401
+
+__all__ = ["BruteForceBackend", "HNSWBitmapBackend", "RawHNSWBackend",
+           "DPKBackend", "FlatLSHBackend", "PrefixFilterBackend",
+           "ShardedDedupBackend"]

@@ -1,0 +1,111 @@
+"""Brute-force online admission — the exact reference (Table 1 ground truth).
+
+Per incoming document: exact MinHash-Jaccard against *every* admitted
+signature (chunked through the Pallas-backed pairwise kernel on the raw
+lanes). O(N) per doc — the 5-day column of Table 1, and the reference
+labeler for recall (the paper validates DPK as equivalent to it).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitmap import pairwise_minhash_jaccard
+from repro.core.dedup import FoldConfig
+from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec
+from repro.index.registry import register
+
+__all__ = ["BruteForceBackend"]
+
+_CHUNK = 8192      # db-axis chunking bounds the (B, N) similarity temp
+
+
+class BruteForceBackend:
+    name = "brute"
+    order = BATCH_FIRST
+
+    def __init__(self, cfg: FoldConfig):
+        self.cfg = cfg
+        self.store = np.zeros((cfg.capacity, cfg.num_hashes), np.uint32)
+        self.n = 0
+
+    @property
+    def sig_spec(self) -> SigSpec:
+        return SigSpec(num_hashes=self.cfg.num_hashes,
+                       shingle_n=self.cfg.shingle_n, seed=self.cfg.seed,
+                       use_kernel=self.cfg.use_kernel,
+                       needs=frozenset({"sigs"}))
+
+    tau_batch = property(lambda self: self.cfg.tau)
+    tau_index = property(lambda self: self.cfg.tau)
+
+    @property
+    def capacity(self) -> int:
+        return len(self.store)
+
+    @property
+    def inserted(self) -> int:
+        return self.n
+
+    def batch_sim(self, sig: SigBatch):
+        return pairwise_minhash_jaccard(sig.sigs, sig.sigs)
+
+    def search(self, sig: SigBatch):
+        B = sig.sigs.shape[0]
+        ids = np.full((B, 1), -1, np.int32)
+        sims = np.full((B, 1), -np.inf, np.float32)
+        if self.n > 0:
+            db = jnp.asarray(self.store[: self.n])
+            for s in range(0, self.n, _CHUNK):
+                # reduce on device: only two (B,) arrays cross to host
+                sim = pairwise_minhash_jaccard(sig.sigs, db[s:s + _CHUNK])
+                j = np.asarray(jnp.argmax(sim, axis=1))
+                best = np.asarray(jnp.max(sim, axis=1))
+                better = best > sims[:, 0]
+                ids[better, 0] = (s + j[better]).astype(np.int32)
+                sims[better, 0] = best[better]
+        return ids, sims
+
+    def insert(self, sig: SigBatch, keep) -> None:
+        new = np.asarray(sig.sigs)[np.asarray(keep)]
+        self.store[self.n:self.n + len(new)] = new
+        self.n += len(new)
+
+    def grow(self, new_capacity: int) -> None:
+        if new_capacity <= self.capacity:
+            return
+        pad = new_capacity - self.capacity
+        self.store = np.concatenate(
+            [self.store, np.zeros((pad, self.cfg.num_hashes), np.uint32)])
+
+    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+        from repro.train import checkpoint as ckpt
+        writer = ckpt.save_async if async_write else ckpt.save
+        writer(ckpt_dir, step, {"store": self.store, "n": np.int64(self.n)},
+               extra={"capacity": self.capacity})
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+        from repro.train import checkpoint as ckpt
+        step = ckpt.latest_step(ckpt_dir) if step is None else step
+        assert step is not None, "no committed checkpoint found"
+        meta = ckpt.manifest(ckpt_dir, step)
+        cap = int(meta.get("capacity", self.capacity))
+        target = max(cap, self.capacity)
+        tmpl = {"store": np.zeros((cap, self.cfg.num_hashes), np.uint32),
+                "n": np.int64(0)}
+        got = ckpt.restore(ckpt_dir, step, tmpl, device=False)
+        self.store, self.n = got["store"], int(got["n"])
+        if target > cap:
+            self.grow(target)
+        return step
+
+    def stats_schema(self) -> tuple[str, ...]:
+        return ("count", "capacity")
+
+    def stats(self) -> dict:
+        return {"count": self.n, "capacity": self.capacity}
+
+
+@register("brute")
+def _make_brute(cfg: FoldConfig | None = None):
+    return BruteForceBackend(cfg or FoldConfig())

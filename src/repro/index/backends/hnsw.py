@@ -1,0 +1,297 @@
+"""HNSW-organized backends: FOLD's bitmap index and the raw-metric FAISS
+analogues (paper §3.2, §4) behind the `repro.index` protocol.
+
+Both share core/hnsw.py's functional index machinery; what differs is the
+vertex representation and distance — exactly the contribution the paper's
+FAISS baselines isolate:
+
+  HNSWBitmapBackend ("hnsw")    (T//32,) packed one-hot-folded bitmaps,
+                                bitmap-Jaccard via the Pallas kernel
+  RawHNSWBackend   ("hnsw_raw") (H,) raw MinHash lanes with the naive
+                                metric (minhash_jaccard | hamming)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dedup import FoldConfig, bitmap_tau
+from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_grow, hnsw_init,
+                             hnsw_insert_batch, hnsw_search, sample_levels)
+from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec
+from repro.index.registry import register
+from repro.kernels import ops
+
+__all__ = ["HNSWBitmapBackend", "RawHNSWBackend"]
+
+
+class _HNSWLifecycle:
+    """Shared functional-HNSW capacity lifecycle.
+
+    Subclasses provide `cfg` (FoldConfig), `hnsw_cfg`, `state`, and a
+    `_batches` level-seed counter; hooks cover any side containers that
+    must track capacity (the bitmap backend's exact-verify sig store)."""
+
+    cfg: FoldConfig
+    hnsw_cfg: HNSWConfig
+    state: HNSWState
+    _batches: int
+
+    # -- hooks ---------------------------------------------------------------
+    def _after_grow(self, new_capacity: int) -> None:
+        pass
+
+    def _reset_containers(self, capacity: int) -> None:
+        """Rebuild side containers at a snapshot's (smaller) capacity."""
+
+    def _extra_tree(self) -> dict:
+        """Extra checkpoint leaves beyond {state, batches}."""
+        return {}
+
+    def _take_extra(self, got: dict) -> None:
+        pass
+
+    # -- lifecycle -----------------------------------------------------------
+    def grow(self, new_capacity: int) -> None:
+        """Re-pad the index to a larger capacity (graph preserved exactly).
+
+        Recompiles search/insert once per growth; the geometric growth
+        policy lives in repro.service.index_manager."""
+        self.hnsw_cfg, self.state = hnsw_grow(self.hnsw_cfg, self.state,
+                                              new_capacity)
+        self.cfg = dataclasses.replace(self.cfg, capacity=new_capacity)
+        self._after_grow(new_capacity)
+
+    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+        """Checkpoint the evolving index (HNSWState is a pytree).
+
+        async_write=True snapshots to host synchronously and writes in a
+        background thread (checkpoint.save_async) — the serving layer uses
+        this so periodic snapshots don't stall the dispatch pipeline on
+        disk I/O. Callers order writes with checkpoint.wait_pending()."""
+        from repro.train import checkpoint as ckpt
+        tree = {"state": self.state, "batches": jnp.int32(self._batches)}
+        tree.update(self._extra_tree())
+        writer = ckpt.save_async if async_write else ckpt.save
+        writer(ckpt_dir, step, tree,
+               extra={"capacity": self.hnsw_cfg.capacity})
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+        from repro.train import checkpoint as ckpt
+        step = ckpt.latest_step(ckpt_dir) if step is None else step
+        assert step is not None, "no committed checkpoint found"
+        meta = ckpt.manifest(ckpt_dir, step)
+        cap = int(meta.get("capacity", self.hnsw_cfg.capacity))
+        target = max(cap, self.hnsw_cfg.capacity)
+        if cap != self.hnsw_cfg.capacity:
+            # rebuild containers at the snapshot's capacity so array shapes
+            # match the checkpoint (a snapshot may be smaller than the
+            # configured capacity — e.g. taken before a config bump); grown
+            # back to the configured size after the load
+            self.hnsw_cfg = self.hnsw_cfg._replace(capacity=cap)
+            self.cfg = dataclasses.replace(self.cfg, capacity=cap)
+            self.state = hnsw_init(self.hnsw_cfg)
+            self._reset_containers(cap)
+        tree = {"state": self.state, "batches": jnp.int32(0)}
+        tree.update(self._extra_tree())
+        got = ckpt.restore(ckpt_dir, step, tree)
+        self.state = got["state"]
+        self._batches = int(got["batches"])
+        self._take_extra(got)
+        if target > cap:
+            self.grow(target)
+        return step
+
+
+class HNSWBitmapBackend(_HNSWLifecycle):
+    """FOLD's index: HNSW top-k over one-hot-folded bitmap signatures.
+
+    Holds the HNSW state plus (optionally) the raw MinHash signatures of
+    admitted docs for the beyond-paper exact-verify option
+    (cfg.verify_minhash — rescores the k retrieved candidates with exact
+    lane agreement inside `search`, removing the bitmap-threshold
+    calibration approximation)."""
+
+    name = "hnsw"
+    order = BATCH_FIRST
+
+    def __init__(self, cfg: FoldConfig):
+        self.cfg = cfg
+        self.hnsw_cfg = cfg.hnsw()
+        self.state: HNSWState = hnsw_init(self.hnsw_cfg)
+        self.tau_b = bitmap_tau(cfg)
+        self._sig_store = (np.zeros((cfg.capacity, cfg.num_hashes), np.uint32)
+                           if cfg.verify_minhash else None)
+        self._batches = 0     # level-seed basis: monotone, sync-free
+
+    # -- protocol: identity --------------------------------------------------
+    @property
+    def sig_spec(self) -> SigSpec:
+        return SigSpec(num_hashes=self.cfg.num_hashes,
+                       shingle_n=self.cfg.shingle_n, T=self.cfg.T,
+                       seed=self.cfg.seed, use_kernel=self.cfg.use_kernel,
+                       needs=frozenset({"sigs", "bitmaps"}))
+
+    @property
+    def tau_batch(self) -> float:
+        return self.tau_b
+
+    @property
+    def tau_index(self) -> float:
+        # exact-verify rescoring reports sims in MinHash space
+        return self.cfg.tau if self.cfg.verify_minhash else self.tau_b
+
+    @property
+    def capacity(self) -> int:
+        return self.hnsw_cfg.capacity
+
+    @property
+    def inserted(self) -> int:
+        """Admitted-document count (host sync: reads the device scalar)."""
+        return int(self.state.count)
+
+    # -- protocol: steps ② ③ ⑤ ----------------------------------------------
+    def batch_sim(self, sig: SigBatch):
+        cached = self.cfg.cached
+        return ops.bitmap_jaccard(sig.bitmaps, sig.bitmaps,
+                                  sig.pcs if cached else None,
+                                  sig.pcs if cached else None,
+                                  cached=cached, use_kernel=self.cfg.use_kernel)
+
+    def search(self, sig: SigBatch):
+        ids, sims = hnsw_search(self.hnsw_cfg, self.state, sig.bitmaps,
+                                k=self.cfg.k)
+        if self.cfg.verify_minhash:
+            # rescore the k candidates with exact lane agreement (host
+            # sync: reads ids + the numpy signature store)
+            cand = self._sig_store[np.maximum(np.asarray(ids), 0)]  # (B,k,H)
+            lane = (np.asarray(sig.sigs)[:, None, :] == cand).mean(-1)
+            sims = jnp.where(jnp.asarray(ids) >= 0,
+                             jnp.asarray(lane, jnp.float32), -jnp.inf)
+        return ids, sims
+
+    def insert(self, sig: SigBatch, keep):
+        B = sig.bitmaps.shape[0]
+        levels = jnp.asarray(sample_levels(
+            B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
+        self._batches += 1
+        if self._sig_store is not None:
+            # host-side store append must know the pre-insert count (sync)
+            start = self.inserted
+            order = np.flatnonzero(np.asarray(keep))
+            self._sig_store[start:start + len(order)] = \
+                np.asarray(sig.sigs)[order]
+        self.state = hnsw_insert_batch(self.hnsw_cfg, self.state, sig.bitmaps,
+                                       sig.pcs, levels, jnp.asarray(keep))
+        return self.state.count     # timing handle (no sync implied)
+
+    # -- lifecycle hooks (exact-verify signature store tracks capacity) ------
+    def _after_grow(self, new_capacity: int) -> None:
+        if self._sig_store is not None and len(self._sig_store) < new_capacity:
+            pad = new_capacity - len(self._sig_store)
+            self._sig_store = np.concatenate(
+                [self._sig_store,
+                 np.zeros((pad, self.cfg.num_hashes), np.uint32)])
+
+    def _reset_containers(self, capacity: int) -> None:
+        if self._sig_store is not None:
+            self._sig_store = np.zeros((capacity, self.cfg.num_hashes),
+                                       np.uint32)
+
+    def _extra_tree(self) -> dict:
+        if self._sig_store is None:
+            return {}
+        return {"sig_store": jnp.asarray(self._sig_store)}
+
+    def _take_extra(self, got: dict) -> None:
+        if self._sig_store is not None:
+            self._sig_store = np.asarray(got["sig_store"])
+
+    # -- protocol: introspection ---------------------------------------------
+    def stats_schema(self) -> tuple[str, ...]:
+        return ("count", "capacity", "batches")
+
+    def stats(self) -> dict:
+        return {"count": self.inserted, "capacity": self.capacity,
+                "batches": self._batches}
+
+
+class RawHNSWBackend(_HNSWLifecycle):
+    """FAISS (Jaccard) / FAISS (Hamming): identical index machinery to FOLD,
+    but vertices are raw (H,) uint32 MinHash signatures scored by
+      - minhash_jaccard: fraction of equal lanes (tie-heavy; low recall), or
+      - hamming: bit agreement across the packed lanes (fast; misaligned).
+    tau applies directly in the metric's own space."""
+
+    name = "hnsw_raw"
+    order = BATCH_FIRST
+
+    def __init__(self, cfg: FoldConfig, metric: str = "minhash_jaccard"):
+        assert metric in ("minhash_jaccard", "hamming"), metric
+        self.cfg = cfg
+        self.metric = metric
+        self.hnsw_cfg = HNSWConfig(
+            capacity=cfg.capacity, words=cfg.num_hashes, M=cfg.M, M0=cfg.M0,
+            ef_construction=cfg.ef_construction, ef_search=cfg.ef_search,
+            max_level=cfg.max_level, metric=metric)
+        self.state: HNSWState = hnsw_init(self.hnsw_cfg)
+        self._batches = 0     # level-seed basis: monotone, sync-free
+
+    @property
+    def sig_spec(self) -> SigSpec:
+        return SigSpec(num_hashes=self.cfg.num_hashes,
+                       shingle_n=self.cfg.shingle_n, seed=self.cfg.seed,
+                       use_kernel=self.cfg.use_kernel,
+                       needs=frozenset({"sigs"}))
+
+    tau_batch = property(lambda self: self.cfg.tau)
+    tau_index = property(lambda self: self.cfg.tau)
+
+    @property
+    def capacity(self) -> int:
+        return self.hnsw_cfg.capacity
+
+    @property
+    def inserted(self) -> int:
+        return int(self.state.count)
+
+    def batch_sim(self, sig: SigBatch):
+        from repro.core.bitmap import pairwise_hamming, pairwise_minhash_jaccard
+        pair = (pairwise_minhash_jaccard if self.metric == "minhash_jaccard"
+                else pairwise_hamming)
+        return pair(sig.sigs, sig.sigs)
+
+    def search(self, sig: SigBatch):
+        return hnsw_search(self.hnsw_cfg, self.state, sig.sigs, k=self.cfg.k)
+
+    def insert(self, sig: SigBatch, keep):
+        B = sig.sigs.shape[0]
+        levels = jnp.asarray(sample_levels(
+            B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
+        self._batches += 1
+        pcs = jnp.zeros(B, jnp.int32)          # unused by raw metrics
+        self.state = hnsw_insert_batch(self.hnsw_cfg, self.state, sig.sigs,
+                                       pcs, levels, jnp.asarray(keep))
+        return self.state.count     # timing handle (no sync implied)
+
+    def stats_schema(self) -> tuple[str, ...]:
+        return ("count", "capacity", "metric")
+
+    def stats(self) -> dict:
+        return {"count": self.inserted, "capacity": self.capacity,
+                "metric": self.metric}
+
+
+@register("hnsw")
+def _make_hnsw(cfg: FoldConfig | None = None, **opts) -> HNSWBitmapBackend:
+    if opts:
+        cfg = dataclasses.replace(cfg or FoldConfig(), **opts)
+    return HNSWBitmapBackend(cfg or FoldConfig())
+
+
+@register("hnsw_raw")
+def _make_hnsw_raw(cfg: FoldConfig | None = None,
+                   metric: str = "minhash_jaccard") -> RawHNSWBackend:
+    return RawHNSWBackend(cfg or FoldConfig(), metric=metric)

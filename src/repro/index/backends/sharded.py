@@ -1,0 +1,151 @@
+"""Mesh-sharded FOLD as a peer backend ("hnsw_sharded").
+
+Each device along `axis` owns an independent HNSW sub-graph over 1/N of the
+admitted corpus (capacity below is PER SHARD). The whole ②-⑤ step is one
+lowered multi-device program (core/sharded.py), so this backend implements
+the protocol's `fused_step` hook instead of split batch_sim/search/insert —
+the generic DedupPipeline routes around the shared sweep when a backend
+fuses. Batches are padded to a multiple of nshards (extra rows
+valid=False), so the executor can drive this exactly like any other
+backend. Retrieved neighbor ids/sims are internal to the sharded top-k
+merge and surface as -1/-inf.
+
+No growth or snapshot path yet: `grow`/`save`/`restore` refuse loudly, and
+the serving layer runs this backend without an IndexManager.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dedup import FoldConfig, bitmap_tau
+from repro.core.hnsw import sample_levels
+from repro.core.sharded import make_sharded_dedup_step, sharded_init
+from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec, StepResult
+from repro.index.registry import register
+
+__all__ = ["ShardedDedupBackend"]
+
+
+class ShardedDedupBackend:
+    name = "hnsw_sharded"
+    order = BATCH_FIRST      # nominal; the fused step owns the ordering
+    supports_growth = False      # per-shard capacity is fixed at init
+    supports_snapshots = False   # sharded state has no save/restore yet
+
+    def __init__(self, cfg: FoldConfig, shards: int | None = None,
+                 mesh=None, axis: str = "data"):
+        if mesh is None:
+            devices = jax.devices()
+            n = len(devices) if shards is None else shards
+            if n > len(devices):
+                raise ValueError(
+                    f"shards={n} but only {len(devices)} devices available")
+            mesh = jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.nshards = mesh.shape[axis]
+        self.hnsw_cfg = cfg.hnsw()
+        self.states = sharded_init(self.hnsw_cfg, mesh, axis)
+        self._step = jax.jit(make_sharded_dedup_step(
+            self.hnsw_cfg, mesh, tau=bitmap_tau(cfg), k=cfg.k, axis=axis,
+            masked=True))
+        self._batches = 0
+        # sync-free per-shard occupancy bound (no growth path for the
+        # sharded index yet: we must refuse, not silently drop, on overflow)
+        self._known_max = 0
+        self._bound = 0
+
+    @property
+    def sig_spec(self) -> SigSpec:
+        return SigSpec(num_hashes=self.cfg.num_hashes,
+                       shingle_n=self.cfg.shingle_n, T=self.cfg.T,
+                       seed=self.cfg.seed, use_kernel=self.cfg.use_kernel,
+                       needs=frozenset({"sigs", "bitmaps"}))
+
+    tau_batch = property(lambda self: bitmap_tau(self.cfg))
+    tau_index = property(lambda self: bitmap_tau(self.cfg))
+
+    @property
+    def capacity(self) -> int:
+        return self.hnsw_cfg.capacity * self.nshards
+
+    @property
+    def inserted(self) -> int:
+        return int(jnp.sum(self.states.count))
+
+    # -- protocol: fused ②-⑤ -------------------------------------------------
+    def fused_step(self, sig: SigBatch, valid=None) -> StepResult:
+        bitmaps, pcs = sig.bitmaps, sig.pcs
+        B = bitmaps.shape[0]
+        # round-robin assignment puts at most ceil(B/n) docs on one shard;
+        # sync the true per-shard max only when the bound gets close
+        per_shard = -(-B // self.nshards)
+        if self._known_max + self._bound + per_shard > self.hnsw_cfg.capacity:
+            self._known_max = int(jnp.max(self.states.count))   # host sync
+            self._bound = 0
+            if (self._known_max + per_shard) > self.hnsw_cfg.capacity:
+                raise RuntimeError(
+                    f"sharded index full: a shard holds {self._known_max} of "
+                    f"{self.hnsw_cfg.capacity} slots and the incoming batch "
+                    f"may not fit; raise fold.capacity (per shard) or add "
+                    f"shards — sharded mode has no growth path yet")
+        self._bound += per_shard
+        pad = (-B) % self.nshards
+        if valid is None:
+            valid = np.ones((B,), bool)
+        if pad:
+            bitmaps = jnp.pad(bitmaps, ((0, pad), (0, 0)))
+            pcs = jnp.pad(pcs, (0, pad))
+            valid = np.pad(np.asarray(valid), (0, pad))
+        levels = jnp.asarray(sample_levels(
+            B + pad, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
+        self._batches += 1
+        self.states, keep, keep_in = self._step(
+            self.states, bitmaps, pcs, levels, jnp.asarray(valid))
+        # the merged top-k per query is internal to the sharded program;
+        # surface the verdict with neighbor ids unknown (-1)
+        k = self.cfg.k
+        ids = jnp.full((B, k), -1, jnp.int32)
+        sims = jnp.full((B, k), -jnp.inf, jnp.float32)
+        return StepResult(keep=keep[:B], keep_in_batch=keep_in[:B],
+                          ids=ids, sims=sims)
+
+    # unreached while fused_step exists, but keep the protocol total
+    def batch_sim(self, sig):
+        raise NotImplementedError("fused backend: use fused_step")
+
+    def search(self, sig):
+        raise NotImplementedError("fused backend: use fused_step")
+
+    def insert(self, sig, keep):
+        raise NotImplementedError("fused backend: use fused_step")
+
+    # -- protocol: lifecycle -------------------------------------------------
+    def grow(self, new_capacity: int) -> None:
+        raise RuntimeError("sharded mode has no growth path yet; "
+                           "size fold.capacity (per shard) up front")
+
+    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+        raise NotImplementedError("sharded snapshots not supported yet; "
+                                  "use shards=1 / backend='hnsw'")
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+        raise NotImplementedError("sharded snapshots not supported yet; "
+                                  "use shards=1 / backend='hnsw'")
+
+    def stats_schema(self) -> tuple[str, ...]:
+        return ("count", "capacity", "shards")
+
+    def stats(self) -> dict:
+        return {"count": self.inserted, "capacity": self.capacity,
+                "shards": self.nshards}
+
+
+@register("hnsw_sharded")
+def _make_sharded(cfg: FoldConfig | None = None, shards: int | None = None,
+                  mesh=None, axis: str = "data"):
+    return ShardedDedupBackend(cfg or FoldConfig(), shards=shards, mesh=mesh,
+                               axis=axis)

@@ -1,0 +1,261 @@
+"""One generic online-dedup pipeline over any registered backend.
+
+Owns the shared steps of the paper's workflow (§4.1, Fig 3): ① signature
+generation (driven by the backend's SigSpec), ② in-batch cleanup (greedy
+leader sweep over the backend's similarity matrix), ④ the threshold filter,
+and the Fig. 7 per-stage timers; the backend contributes ③ search and
+⑤ insert plus the capacity/snapshot lifecycle.
+
+Like the original FoldPipeline, the workflow is split into two reusable
+stage functions — `signatures` (step ①, host prep + device dispatch) and
+`dedup_step` (steps ②-⑤) — so the serving layer (repro.service.executor)
+can pipeline batch i+1's signature prep under batch i's search/insert via
+JAX async dispatch. `process_batch` composes the two with blocking
+per-stage timers, preserving the Fig. 7 breakdown. Host-side backends
+(DPK, flat LSH, prefix filter) synchronize inside `search`; the surface is
+identical, they just don't overlap.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.protocol import (BATCH_FIRST, INDEX_FIRST, SigBatch,
+                                  StepResult)
+
+__all__ = ["DedupPipeline", "greedy_leader", "greedy_leader_split"]
+
+
+@functools.partial(jax.jit, static_argnames=("tau",))
+def _greedy_sweep(sim: jnp.ndarray, tau: float, eligible: jnp.ndarray):
+    """Exact sequential greedy-leader over a (B, B) similarity matrix.
+
+    keep[i] = eligible[i] and no kept j < i with sim[i, j] >= tau;
+    hit[i]  = some kept j < i has sim[i, j] >= tau (the in-batch-duplicate
+    flag, tracked separately so ineligible docs are still labeled).
+    O(B) fori over rows."""
+    B = sim.shape[0]
+    idx = jnp.arange(B)
+
+    def body(i, carry):
+        keep, hit = carry
+        h = jnp.any((sim[i] >= tau) & keep & (idx < i))
+        return keep.at[i].set(eligible[i] & ~h), hit.at[i].set(h)
+
+    init = (jnp.zeros((B,), jnp.bool_), jnp.zeros((B,), jnp.bool_))
+    return jax.lax.fori_loop(0, B, body, init)
+
+
+def greedy_leader(sim, tau: float, eligible=None) -> jnp.ndarray:
+    """Step ②: keep-mask for in-batch dedup (public since PR 2).
+
+    eligible (B,) bool — docs that may be kept at all; ineligible docs are
+    never leaders (used for INDEX_FIRST / join-style admission where corpus
+    duplicates are excluded before the sweep). Default: all eligible."""
+    return greedy_leader_split(sim, tau, eligible)[0]
+
+
+def greedy_leader_split(sim, tau: float, eligible=None):
+    """greedy_leader plus the in-batch-duplicate flag: (keep, batch_hit)."""
+    sim = jnp.asarray(sim)
+    if eligible is None:
+        eligible = jnp.ones((sim.shape[0],), jnp.bool_)
+    return _greedy_sweep(sim, float(tau), jnp.asarray(eligible))
+
+
+def _ready(x) -> None:
+    """Block on a device array; no-op for host (numpy) results."""
+    if hasattr(x, "block_until_ready"):
+        x.block_until_ready()
+
+
+class DedupPipeline:
+    """Host-side orchestration of online dedup over an evolving corpus.
+
+    Composes the shared signature stage + in-batch cleanup with any
+    `repro.index.protocol.DedupBackend`; lifecycle calls (`grow`, `save`,
+    `restore`, `capacity`, `inserted`, `stats_schema`) delegate to the
+    backend, so the serving layer's growth watermark and snapshot rotation
+    work for every registered backend."""
+
+    def __init__(self, backend):
+        # deferred: repro.core's package init imports repro.index (the
+        # FoldPipeline re-export), so core modules load lazily here
+        from repro.core.hashing import hash_seeds
+        self.backend = backend
+        spec = backend.sig_spec
+        self._spec = spec
+        self._seeds = (hash_seeds(spec.num_hashes, spec.seed)
+                       if ({"sigs", "bitmaps"} & spec.needs) else None)
+
+    # -- lifecycle (delegated) ----------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.backend.capacity
+
+    @property
+    def inserted(self) -> int:
+        return self.backend.inserted
+
+    def grow(self, new_capacity: int):
+        self.backend.grow(new_capacity)
+        return self
+
+    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+        self.backend.save(ckpt_dir, step, async_write=async_write)
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+        return self.backend.restore(ckpt_dir, step)
+
+    def stats_schema(self) -> tuple[str, ...]:
+        return (("t_signature", "t_in_batch", "t_search", "t_insert",
+                 "n_batch_drop", "n_index_drop", "n_insert", "count")
+                + tuple(self.backend.stats_schema()))
+
+    # -- step ① -------------------------------------------------------------
+    def signatures(self, tokens, lengths) -> SigBatch:
+        """shingle → (MinHash → bitmap) per the backend's SigSpec.
+
+        Dispatches device work and returns immediately (arrays are futures
+        under JAX async dispatch)."""
+        from repro.core import bitmap as bm
+        from repro.core.shingle import shingle_hashes
+        from repro.kernels import ops
+        spec = self._spec
+        sh = shingle_hashes(jnp.asarray(tokens, jnp.uint32),
+                            jnp.asarray(lengths, jnp.int32), spec.shingle_n)
+        sigs = bitmaps = pcs = None
+        if self._seeds is not None:
+            sigs = ops.minhash(sh, self._seeds, use_kernel=spec.use_kernel)
+        if "bitmaps" in spec.needs:
+            bitmaps = bm.pack_bitmaps(sigs, T=spec.T)
+            pcs = bm.popcount(bitmaps)
+        return SigBatch(sigs=sigs, bitmaps=bitmaps, pcs=pcs,
+                        shingles=sh if "shingles" in spec.needs else None)
+
+    # -- steps ②-⑤ ----------------------------------------------------------
+    def dedup_step(self, sig: SigBatch, valid=None,
+                   timers: dict[str, Any] | None = None) -> StepResult:
+        """In-batch cleanup, index search, threshold filter, admit uniques.
+
+        valid: optional (B,) bool — False rows are shape padding from the
+        micro-batcher: they take part in nothing observable (padding rows
+        sit at the END of the batch, so the greedy in-batch sweep cannot
+        drop a real doc on their account) and are never admitted.
+
+        timers: pass a dict to run in blocking mode — per-stage wall-clock
+        is recorded under t_in_batch / t_search / t_insert (Fig. 7 hooks).
+        Without it the step is dispatched as asynchronously as the backend
+        allows, letting the executor overlap the next batch's signature
+        stage with this step's device execution.
+        """
+        be = self.backend
+        fused = getattr(be, "fused_step", None)
+        if fused is not None:
+            if timers is not None:
+                timers.setdefault("t_in_batch", 0.0)
+                timers.setdefault("t_search", 0.0)
+                timers.setdefault("t_insert", 0.0)
+                t0 = time.perf_counter()
+                res = fused(sig, valid=valid)
+                _ready(res.keep)
+                timers["t_fused_step"] = time.perf_counter() - t0
+                return res
+            return fused(sig, valid=valid)
+        if be.order == BATCH_FIRST:
+            return self._step_batch_first(sig, valid, timers)
+        assert be.order == INDEX_FIRST, be.order
+        return self._step_index_first(sig, valid, timers)
+
+    def _step_batch_first(self, sig, valid, timers) -> StepResult:
+        be = self.backend
+        block = timers is not None
+
+        t0 = time.perf_counter()
+        keep_in_batch = greedy_leader(be.batch_sim(sig), be.tau_batch)
+        if block:
+            _ready(keep_in_batch)
+            timers["t_in_batch"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ids, sims = be.search(sig)
+        dup_index = (sims >= be.tau_index).any(axis=-1)
+        if block:
+            _ready(dup_index)
+            timers["t_search"] = time.perf_counter() - t0
+
+        keep = keep_in_batch & ~jnp.asarray(dup_index)
+        if valid is not None:
+            keep = keep & jnp.asarray(valid)
+
+        t0 = time.perf_counter()
+        handle = be.insert(sig, keep)
+        if block:
+            if handle is not None:   # device insert: charge it to t_insert
+                _ready(handle)
+            timers["t_insert"] = time.perf_counter() - t0
+        return StepResult(keep=keep, keep_in_batch=keep_in_batch,
+                          ids=ids, sims=sims)
+
+    def _step_index_first(self, sig, valid, timers) -> StepResult:
+        be = self.backend
+        block = timers is not None
+
+        t0 = time.perf_counter()
+        ids, sims = be.search(sig)
+        dup_index = np.asarray((sims >= be.tau_index).any(axis=-1))
+        if block:
+            timers["t_search"] = time.perf_counter() - t0
+
+        eligible = ~dup_index
+        if valid is not None:
+            eligible = eligible & np.asarray(valid)
+
+        t0 = time.perf_counter()
+        if hasattr(be, "in_batch_keep"):
+            keep, hit = be.in_batch_keep(sig, eligible)
+        else:
+            keep, hit = greedy_leader_split(be.batch_sim(sig), be.tau_batch,
+                                            eligible)
+        if block:
+            _ready(keep)
+            timers["t_in_batch"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        handle = be.insert(sig, keep)
+        if block:
+            if handle is not None:
+                _ready(handle)
+            timers["t_insert"] = time.perf_counter() - t0
+        return StepResult(keep=keep, keep_in_batch=~np.asarray(hit),
+                          ids=ids, sims=sims)
+
+    def process_batch(self, tokens, lengths) -> tuple[np.ndarray, dict]:
+        """Dedup one incoming batch. Returns (keep_mask (B,), stats).
+
+        Blocking composition of the two stage functions; per-stage timing
+        and admit/drop accounting preserved for the Fig. 7 breakdown."""
+        stats: dict[str, Any] = {}
+
+        t0 = time.perf_counter()
+        sig = self.signatures(tokens, lengths)
+        for a in reversed(sig):
+            if a is not None:
+                _ready(a)
+                break
+        stats["t_signature"] = time.perf_counter() - t0
+
+        res = self.dedup_step(sig, timers=stats)
+
+        keep = np.asarray(res.keep)
+        keep_in_batch = np.asarray(res.keep_in_batch)
+        stats["n_batch_drop"] = int((~keep_in_batch).sum())
+        stats["n_index_drop"] = int((keep_in_batch & ~keep).sum())
+        stats["n_insert"] = int(keep.sum())
+        stats["count"] = self.backend.inserted
+        return keep, stats

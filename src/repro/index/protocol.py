@@ -1,0 +1,155 @@
+"""The pluggable dedup-backend API (paper §3, §6: the index design space).
+
+FOLD's argument is comparative: HNSW-over-bitmaps vs DPK-style LSH banding,
+Milvus-style budgeted flat retrieval, prefix-filter joins, and raw-metric
+HNSW are all *organizations of the same online admission loop*:
+
+  ① signature generation → ② in-batch cleanup → ③ index search →
+  ④ threshold filter → ⑤ admit uniques
+
+Steps ①②④ are shared; what varies per competitor is the signature
+*representation* it consumes (bitmaps / raw MinHash lanes / shingle sets)
+and how ③ search and ⑤ insert are organized. `DedupBackend` captures
+exactly that variance; `repro.index.pipeline.DedupPipeline` owns the shared
+loop, and `repro.index.registry` maps string keys to backend factories so
+the serving layer, the benchmarks, and the training ingest can all be
+pointed at any competitor with a config string.
+
+A new backend is ~100 lines: implement `search`/`insert` over one of the
+`SigBatch` representations, the capacity lifecycle (`grow`, `save`,
+`restore`, `capacity`, `inserted`) and `stats_schema`, then
+`repro.index.register("my_key")` it.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+__all__ = ["SigSpec", "SigBatch", "StepResult", "DedupBackend",
+           "BATCH_FIRST", "INDEX_FIRST"]
+
+# Admission-loop orderings (see DedupPipeline.dedup_step):
+#   BATCH_FIRST — FOLD and every sketch baseline: in-batch greedy-leader
+#     sweep first, then the index filter over the surviving docs' searches.
+#   INDEX_FIRST — join-style semantics (prefix filter): corpus duplicates
+#     are excluded *before* the greedy sweep, so an index-duplicate never
+#     suppresses a later in-batch near-duplicate.
+BATCH_FIRST = "batch_first"
+INDEX_FIRST = "index_first"
+
+
+class SigSpec(NamedTuple):
+    """What step ① must produce for a backend (drives DedupPipeline's
+    signature stage; everything it names is device-dispatched and async).
+
+    needs ⊆ {"sigs", "bitmaps", "shingles"}:
+      sigs     — (B, H) uint32 MinHash lanes
+      bitmaps  — (B, T//32) uint32 one-hot-folded bitmaps (+ popcounts)
+      shingles — (B, S) uint32 raw shingle hashes (0xFFFFFFFF padding),
+                 for set-semantics backends that skip sketching entirely
+    """
+    num_hashes: int = 112
+    shingle_n: int = 5
+    T: int = 4096
+    seed: int = 0
+    use_kernel: bool = True
+    needs: frozenset = frozenset({"sigs"})
+
+
+class SigBatch(NamedTuple):
+    """Step-① output for one batch; fields the backend didn't ask for are
+    None. Arrays are JAX futures (no host sync implied)."""
+    sigs: Any = None
+    bitmaps: Any = None
+    pcs: Any = None
+    shingles: Any = None
+
+    @property
+    def n_docs(self) -> int:
+        for a in self:
+            if a is not None:
+                return a.shape[0]
+        raise ValueError("empty SigBatch")
+
+
+class StepResult(NamedTuple):
+    """Outcome of one dedup_step (device-side for device backends — no
+    host sync implied; plain numpy for host-side backends).
+
+    keep           (B,) bool — admit mask (in-batch ∧ index ∧ valid)
+    keep_in_batch  (B,) bool — step-② survivors (False = in-batch duplicate)
+    ids            (B, k) int32 — retrieved neighbor ids (-1 = none)
+    sims           (B, k) f32 — similarities in the backend's index space
+    """
+    keep: Any
+    keep_in_batch: Any
+    ids: Any
+    sims: Any
+
+
+@runtime_checkable
+class DedupBackend(Protocol):
+    """Steps ③+⑤ plus the index lifecycle, over one SigBatch representation.
+
+    Required surface (structural — no inheritance needed):
+
+      name: str                      registry key / stats label
+      sig_spec: SigSpec              what step ① must compute
+      order: str                     BATCH_FIRST | INDEX_FIRST
+      tau_batch: float               in-batch threshold (batch_sim space)
+      tau_index: float               index threshold (search-sims space)
+      capacity: int                  allocated document slots
+      inserted: int                  admitted documents (may host-sync)
+
+      batch_sim(sig) -> (B, B)       step-② similarity matrix
+      search(sig) -> (ids, sims)     step-③: (B, k) neighbors vs the
+                                     *pre-batch* corpus; -1 / -inf = none
+      insert(sig, keep)              step-⑤: admit keep-masked docs; MAY
+                                     return a device array for the pipeline
+                                     to block on when timing the stage
+                                     (None for synchronous host inserts)
+      grow(new_capacity) -> None     geometric re-alloc (service watermark)
+      save(dir, step, async_write=False) -> None
+      restore(dir, step=None) -> int
+      stats_schema() -> tuple[str]   keys stats() yields
+      stats() -> dict                cheap introspection counters
+
+    Optional hooks (DedupPipeline checks hasattr):
+
+      fused_step(sig, valid=None) -> StepResult
+          Replace steps ②-⑤ with one program — for backends whose whole
+          step is a single lowered computation (e.g. the multi-device
+          sharded HNSW step) that cannot be split without losing fusion.
+          The pipeline does the Fig. 7 timing around the call (recorded
+          under t_fused_step); fused backends never see the timers dict.
+      in_batch_keep(sig, eligible) -> (keep, batch_hit)
+          Replace the sim-matrix greedy sweep with a backend-native one
+          (e.g. lazy host-side set comparisons). Only consulted for
+          INDEX_FIRST backends, with eligible = ~index_dup ∧ valid.
+      supports_growth / supports_snapshots: bool (default True)
+          Declare a lifecycle hole: the serving layer skips its growth
+          watermark / snapshot rotation (and rejects snapshot configs)
+          instead of tripping over a raising grow()/save().
+    """
+    name: str
+    order: str
+
+    @property
+    def sig_spec(self) -> SigSpec: ...
+    @property
+    def tau_batch(self) -> float: ...
+    @property
+    def tau_index(self) -> float: ...
+    @property
+    def capacity(self) -> int: ...
+    @property
+    def inserted(self) -> int: ...
+
+    def batch_sim(self, sig: SigBatch) -> Any: ...
+    def search(self, sig: SigBatch) -> tuple[Any, Any]: ...
+    def insert(self, sig: SigBatch, keep: Any) -> Any: ...
+    def grow(self, new_capacity: int) -> None: ...
+    def save(self, ckpt_dir: str, step: int,
+             async_write: bool = False) -> None: ...
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int: ...
+    def stats_schema(self) -> tuple[str, ...]: ...
+    def stats(self) -> dict: ...

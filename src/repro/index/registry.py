@@ -1,0 +1,70 @@
+"""String-keyed backend registry: `make("dpk")` instead of a bespoke class.
+
+Factories receive the shared pipeline config (`repro.core.dedup.FoldConfig`
+— signature params, tau, capacity, seed are meaningful to every backend;
+bitmap/HNSW fields are consumed only by the backends that use them) plus
+backend-specific keyword options (e.g. flat_lsh's `topk`, hnsw_raw's
+`metric`). Built-in backends self-register on first use; third-party code
+registers at import time:
+
+    import repro.index as ix
+
+    @ix.register("my_backend")
+    def _make(cfg, **opts):
+        return MyBackend(cfg, **opts)
+
+    pipe = ix.make_pipeline("my_backend", cfg=FoldConfig(tau=0.8))
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable
+
+__all__ = ["register", "make", "make_pipeline", "available"]
+
+_REGISTRY: dict[str, Callable] = {}
+_BUILTINS_LOADED = False
+
+
+def register(name: str, factory: Callable | None = None):
+    """Register a backend factory under `name` (decorator or direct call).
+
+    The factory signature is `factory(cfg: FoldConfig | None, **opts) ->
+    DedupBackend`. Re-registering a name overwrites (last wins), so tests
+    and plugins can shadow built-ins."""
+    def _do(f: Callable):
+        _REGISTRY[name] = f
+        return f
+    return _do(factory) if factory is not None else _do
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_LOADED
+    if not _BUILTINS_LOADED:
+        _BUILTINS_LOADED = True
+        # import for registration side effects; deferred so that
+        # repro.index <-> repro.core.dedup imports cannot cycle
+        importlib.import_module("repro.index.backends")
+
+
+def available() -> tuple[str, ...]:
+    """Registered backend keys, sorted."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def make(name: str, cfg=None, **opts):
+    """Instantiate the backend registered under `name`."""
+    _ensure_builtins()
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown dedup backend {name!r}; "
+                       f"registered: {', '.join(available())}") from None
+    return factory(cfg, **opts)
+
+
+def make_pipeline(name: str, cfg=None, **opts):
+    """`make` + wrap in the generic DedupPipeline (the usual entry point)."""
+    from repro.index.pipeline import DedupPipeline
+    return DedupPipeline(make(name, cfg, **opts))

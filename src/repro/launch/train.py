@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--service", action="store_true",
                     help="service-backed dedup ingestion: micro-batched, "
                          "pipelined, auto-growing index (repro.service)")
+    ap.add_argument("--dedup-backend", default="hnsw",
+                    help="repro.index registry key for the dedup index "
+                         "(hnsw, dpk, flat_lsh, prefix_filter, hnsw_raw, "
+                         "brute, hnsw_sharded)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -70,10 +74,11 @@ def main():
     elif args.service:
         from repro.service import DedupService, ServiceConfig
         svc = DedupService(ServiceConfig(fold=fold_cfg, max_batch=256,
-                                         max_wait_ms=0.0))
+                                         max_wait_ms=0.0,
+                                         backend=args.dedup_backend))
         ingest = DedupIngest(src, service=svc)
     else:
-        ingest = DedupIngest(src, fold_cfg)
+        ingest = DedupIngest(src, fold_cfg, backend=args.dedup_backend)
 
     def fill_packer():
         while True:

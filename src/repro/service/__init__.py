@@ -1,9 +1,10 @@
 """repro.service — the online dedup serving layer (production ingestion path).
 
-Sits on top of core/dedup.py (stage functions) and core/sharded.py (multi-
-device routing): dynamic micro-batching with bucketed shapes, a depth-bounded
-async-dispatch pipeline, index lifecycle management (growth + snapshot
-rotation), and a ticketed front API with serving metrics.
+Sits on top of the pluggable `repro.index` API: dynamic micro-batching with
+bucketed shapes, a depth-bounded async-dispatch pipeline, index lifecycle
+management (growth + snapshot rotation), and a ticketed front API with
+serving metrics — all generic over any registered dedup backend
+(`ServiceConfig(backend="hnsw" | "dpk" | "flat_lsh" | ...)`).
 """
 from repro.service.batcher import MicroBatch, MicroBatcher, pow2_buckets  # noqa: F401
 from repro.service.executor import BatchOutcome, PipelinedExecutor  # noqa: F401

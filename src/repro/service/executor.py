@@ -1,4 +1,4 @@
-"""Pipelined execution of FOLD micro-batches via JAX async dispatch.
+"""Pipelined execution of dedup micro-batches via JAX async dispatch.
 
 JAX device computations are futures: `pipe.signatures` and `pipe.dedup_step`
 return without waiting for device execution, and the device queue runs them
@@ -6,10 +6,17 @@ in dispatch order. The naive `process_batch` loop throws that away by
 calling `block_until_ready` after every stage (it must, to time them). The
 executor instead dispatches batch i's whole graph, then immediately starts
 batch i+1's host-side work — shingle prep, padding, dispatch — while batch
-i's HNSW search/insert is still executing. Results are materialized a fixed
+i's index search/insert is still executing. Results are materialized a fixed
 `depth` batches behind the dispatch front, so the host is never more than
 `depth` batches ahead (bounding live device memory) and never idle waiting
 for a result it doesn't need yet.
+
+The executor drives the generic `repro.index.DedupPipeline` surface —
+`signatures(tokens, lengths) -> SigBatch` then `dedup_step(sig, valid)` —
+so it serves ANY registered backend. Device-side backends (hnsw,
+hnsw_sharded, hnsw_raw) overlap as described; host-side backends (dpk,
+flat_lsh, prefix_filter, brute) synchronize inside their search and simply
+run the same protocol without overlap.
 
 Sequential-mode equivalence: the executor runs the exact same stage
 functions against the same evolving index state in the same order, so its
@@ -25,7 +32,8 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.core.dedup import FoldPipeline, StepResult
+from repro.index.pipeline import DedupPipeline
+from repro.index.protocol import StepResult
 from repro.service.batcher import MicroBatch
 
 __all__ = ["BatchOutcome", "PipelinedExecutor"]
@@ -43,7 +51,7 @@ class BatchOutcome:
 
 
 class PipelinedExecutor:
-    """Depth-bounded pipeline over a FoldPipeline.
+    """Depth-bounded pipeline over a DedupPipeline.
 
     on_outcome: optional callback invoked for every materialized batch in
     submission order (the service wires metrics + verdict recording here).
@@ -51,7 +59,7 @@ class PipelinedExecutor:
     on its own result) — the comparison arm in benchmarks.
     """
 
-    def __init__(self, pipe: FoldPipeline, depth: int = 2,
+    def __init__(self, pipe: DedupPipeline, depth: int = 2,
                  on_outcome: Callable[[BatchOutcome], Any] | None = None):
         self.pipe = pipe
         self.depth = max(int(depth), 0)
@@ -67,8 +75,8 @@ class PipelinedExecutor:
         """Dispatch one micro-batch; may materialize older ones to keep the
         pipeline no more than `depth` deep."""
         t0 = time.perf_counter()
-        sigs, bitmaps, pcs = self.pipe.signatures(mb.tokens, mb.lengths)
-        res = self.pipe.dedup_step(sigs, bitmaps, pcs, valid=mb.valid)
+        sig = self.pipe.signatures(mb.tokens, mb.lengths)
+        res = self.pipe.dedup_step(sig, valid=mb.valid)
         self._inflight.append((mb, res, t0))
         while len(self._inflight) > self.depth:
             self._collect_one()

@@ -1,45 +1,40 @@
-"""Index lifecycle: capacity growth, snapshot rotation, shard routing.
+"""Index lifecycle: capacity growth and snapshot rotation for any backend.
 
-Growth. The HNSW index is fixed-capacity dense arrays; `hnsw_grow` re-pads
-them functionally. The manager decides WHEN: occupancy is a device scalar
-and reading it would stall the executor's pipeline every batch, so the
-manager tracks a sync-free upper bound (last known count + docs dispatched
-since) and only pays a host sync when that bound crosses the high-water
-mark. Growth is geometric (default 2x) so the per-growth recompile of the
-search/insert programs amortizes to O(log corpus) compiles.
+Growth. Index capacity is dense pre-allocated storage — HNSW arrays for the
+graph backends, numpy signature stores for the LSH/brute baselines — and
+every registered backend implements the protocol's `grow()` as a functional
+or in-place re-alloc. The manager decides WHEN: occupancy may be a device
+scalar and reading it would stall the executor's pipeline every batch, so
+the manager tracks a sync-free upper bound (last known count + docs
+dispatched since) and only pays a host sync when that bound crosses the
+high-water mark. Growth is geometric (default 2x) so any per-growth
+recompile of search/insert programs amortizes to O(log corpus) compiles.
 
 Snapshots. Rolling rotation on top of train/checkpoint's atomic-commit
 layout: every `snapshot_every` batches the pipeline state is saved and only
 the newest `max_snapshots` committed steps are kept — restart cost is
 bounded and disk does not grow with corpus lifetime.
 
-Sharding. `ShardedDedupBackend` routes the dedup step onto the
-core/sharded.py multi-shard program (one HNSW sub-graph per device along a
-mesh axis) behind the same dedup_step(sigs, bitmaps, pcs, valid) surface the
-executor drives, so a multi-device host scales corpus capacity and search
-throughput without the service layer changing shape.
+Sharding. `ShardedDedupBackend` (now a registered `repro.index` backend,
+key "hnsw_sharded" — re-exported here for compatibility) routes the dedup
+step onto the core/sharded.py multi-shard program behind the same protocol
+surface the executor drives; it declares supports_growth=False /
+supports_snapshots=False, so the service runs it without an IndexManager.
 """
 from __future__ import annotations
 
 import os
 import shutil
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.dedup import (FoldConfig, FoldPipeline, StepResult,
-                              bitmap_tau, fold_signatures)
-from repro.core.hashing import hash_seeds
-from repro.core.hnsw import sample_levels
-from repro.core.sharded import make_sharded_dedup_step, sharded_init
+from repro.index.backends.sharded import ShardedDedupBackend  # noqa: F401
+from repro.index.pipeline import DedupPipeline
 from repro.train import checkpoint as ckpt
 
 __all__ = ["IndexManager", "ShardedDedupBackend"]
 
 
 class IndexManager:
-    def __init__(self, pipe: FoldPipeline, *, grow_watermark: float = 0.85,
+    def __init__(self, pipe: DedupPipeline, *, grow_watermark: float = 0.85,
                  growth_factor: float = 2.0, max_capacity: int | None = None,
                  snapshot_dir: str | None = None, snapshot_every: int = 0,
                  max_snapshots: int = 3):
@@ -101,9 +96,9 @@ class IndexManager:
             self.pipe.grow(new_cap)
             self.grow_events += 1
         # max_capacity may have clamped growth below what the batch needs
-        # (or forbidden it entirely). Refuse rather than let
-        # hnsw_insert_batch silently drop rows whose verdicts would still
-        # claim 'admitted' — mirrors ShardedDedupBackend.
+        # (or forbidden it entirely). Refuse rather than let the insert
+        # silently drop rows whose verdicts would still claim 'admitted' —
+        # mirrors ShardedDedupBackend.
         if self._known_count + incoming > self.pipe.capacity:
             raise RuntimeError(
                 f"index full: {self._known_count} of {self.pipe.capacity} "
@@ -155,85 +150,3 @@ class IndexManager:
         self._known_count = self.pipe.inserted
         self._dispatched = 0
         return step
-
-
-class ShardedDedupBackend:
-    """dedup_step-compatible facade over the multi-shard step.
-
-    Each device along `axis` owns an independent HNSW sub-graph over 1/N of
-    the admitted corpus (capacity below is PER SHARD). Batches are padded to
-    a multiple of nshards (extra rows valid=False), so the executor can
-    drive this exactly like a FoldPipeline. Retrieved neighbor ids/sims are
-    internal to the sharded top-k merge and surface as -1/-inf."""
-
-    def __init__(self, cfg: FoldConfig, shards: int | None = None,
-                 mesh=None, axis: str = "data"):
-        if mesh is None:
-            devices = jax.devices()
-            n = len(devices) if shards is None else shards
-            if n > len(devices):
-                raise ValueError(
-                    f"shards={n} but only {len(devices)} devices available")
-            mesh = jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
-        self.cfg = cfg
-        self.mesh = mesh
-        self.axis = axis
-        self.nshards = mesh.shape[axis]
-        self.hnsw_cfg = cfg.hnsw()
-        self.states = sharded_init(self.hnsw_cfg, mesh, axis)
-        self._step = jax.jit(make_sharded_dedup_step(
-            self.hnsw_cfg, mesh, tau=bitmap_tau(cfg), k=cfg.k, axis=axis,
-            masked=True))
-        self._seeds = hash_seeds(cfg.num_hashes, cfg.seed)
-        self._batches = 0
-        # sync-free per-shard occupancy bound (no growth path for the
-        # sharded index yet: we must refuse, not silently drop, on overflow)
-        self._known_max = 0
-        self._bound = 0
-
-    @property
-    def capacity(self) -> int:
-        return self.hnsw_cfg.capacity * self.nshards
-
-    @property
-    def inserted(self) -> int:
-        return int(jnp.sum(self.states.count))
-
-    def signatures(self, tokens, lengths):
-        return fold_signatures(self.cfg, self._seeds, tokens, lengths)
-
-    def dedup_step(self, sigs, bitmaps, pcs, valid=None,
-                   timers=None) -> StepResult:
-        B = bitmaps.shape[0]
-        # round-robin assignment puts at most ceil(B/n) docs on one shard;
-        # sync the true per-shard max only when the bound gets close
-        per_shard = -(-B // self.nshards)
-        if self._known_max + self._bound + per_shard > self.hnsw_cfg.capacity:
-            self._known_max = int(jnp.max(self.states.count))   # host sync
-            self._bound = 0
-            if (self._known_max + per_shard) > self.hnsw_cfg.capacity:
-                raise RuntimeError(
-                    f"sharded index full: a shard holds {self._known_max} of "
-                    f"{self.hnsw_cfg.capacity} slots and the incoming batch "
-                    f"may not fit; raise fold.capacity (per shard) or add "
-                    f"shards — sharded mode has no growth path yet")
-        self._bound += per_shard
-        pad = (-B) % self.nshards
-        if valid is None:
-            valid = np.ones((B,), bool)
-        if pad:
-            bitmaps = jnp.pad(bitmaps, ((0, pad), (0, 0)))
-            pcs = jnp.pad(pcs, (0, pad))
-            valid = np.pad(np.asarray(valid), (0, pad))
-        levels = jnp.asarray(sample_levels(
-            B + pad, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
-        self._batches += 1
-        self.states, keep, keep_in = self._step(
-            self.states, bitmaps, pcs, levels, jnp.asarray(valid))
-        # the merged top-k per query is internal to the sharded program;
-        # surface the verdict with neighbor ids unknown (-1)
-        k = self.cfg.k
-        ids = jnp.full((B, k), -1, jnp.int32)
-        sims = jnp.full((B, k), -jnp.inf, jnp.float32)
-        return StepResult(keep=keep[:B], keep_in_batch=keep_in[:B],
-                          ids=ids, sims=sims)

@@ -7,6 +7,14 @@ Composition of the serving subsystem:
                    coalescing)      dispatch pipeline)    │
                         IndexManager (growth + snapshots) ┘
 
+The index organization is pluggable: `ServiceConfig.backend` names any
+`repro.index` registry key ("hnsw" — FOLD, the default — "hnsw_sharded",
+"dpk", "flat_lsh", "prefix_filter", "hnsw_raw", "brute", or a third-party
+registration), and the service composes the generic DedupPipeline for it.
+Every backend gets micro-batching, pipelined execution, growth watermarks,
+and snapshot rotation for free; backends that declare
+supports_growth/supports_snapshots = False run without an IndexManager.
+
 The service is caller-driven (no background thread): `submit` pumps every
 batch the batching policy allows, `flush` forces the ragged remainder
 through and blocks until all in-flight batches materialize, and `results`
@@ -18,14 +26,15 @@ executor still overlaps host signature prep with device search/insert.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, NamedTuple
+from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.dedup import FoldConfig, FoldPipeline
+from repro.core.dedup import FoldConfig
+from repro.index import make_pipeline
 from repro.service.batcher import MicroBatcher
 from repro.service.executor import BatchOutcome, PipelinedExecutor
-from repro.service.index_manager import IndexManager, ShardedDedupBackend
+from repro.service.index_manager import IndexManager
 from repro.service.metrics import MetricsRegistry
 
 __all__ = ["ServiceConfig", "DedupService", "DocVerdict", "Ticket"]
@@ -34,6 +43,10 @@ __all__ = ["ServiceConfig", "DedupService", "DocVerdict", "Ticket"]
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     fold: FoldConfig = dataclasses.field(default_factory=FoldConfig)
+    # index organization: any repro.index registry key + factory options
+    # (e.g. backend="flat_lsh", backend_opts={"topk": 160})
+    backend: str = "hnsw"
+    backend_opts: dict = dataclasses.field(default_factory=dict)
     # micro-batching
     max_batch: int = 128
     max_wait_ms: float = 5.0
@@ -49,8 +62,8 @@ class ServiceConfig:
     snapshot_dir: str | None = None
     snapshot_every: int = 0          # batches between snapshots; 0 = off
     max_snapshots: int = 3
-    # distribution: >1 routes onto the core/sharded multi-shard step
-    # (requires that many devices; fold.capacity is then per shard)
+    # distribution: >1 selects the "hnsw_sharded" backend (requires that
+    # many devices; fold.capacity is then per shard)
     shards: int = 1
     # fire-and-forget producers that only read stats() should disable the
     # per-doc verdict store — it grows with every document until results()
@@ -73,36 +86,52 @@ class Ticket(NamedTuple):
 
 
 class DedupService:
-    """Online dedup serving facade over a FoldPipeline (or sharded backend)."""
+    """Online dedup serving facade over any registered index backend."""
 
     def __init__(self, cfg: ServiceConfig | None = None):
         self.cfg = cfg = cfg or ServiceConfig()
+        backend_key = cfg.backend
+        opts = dict(cfg.backend_opts)
         if cfg.shards > 1:
-            if cfg.snapshot_dir or cfg.snapshot_every:
+            if backend_key == "hnsw":
+                backend_key = "hnsw_sharded"
+            elif backend_key != "hnsw_sharded":
                 raise ValueError(
-                    "snapshots are not supported in sharded mode yet; "
-                    "unset snapshot_dir/snapshot_every or use shards=1")
-            self.backend = ShardedDedupBackend(cfg.fold, shards=cfg.shards)
-            self.index_manager = None        # per-shard capacity is fixed
-        else:
-            self.backend = FoldPipeline(cfg.fold)
+                    f"shards={cfg.shards} requires the 'hnsw_sharded' "
+                    f"backend, got backend={cfg.backend!r}")
+            opts.setdefault("shards", cfg.shards)
+        self.pipeline = make_pipeline(backend_key, cfg=cfg.fold, **opts)
+        be = self.pipeline.backend
+        if not getattr(be, "supports_snapshots", True) and (
+                cfg.snapshot_dir or cfg.snapshot_every):
+            raise ValueError(
+                f"snapshots are not supported by backend {be.name!r}; "
+                f"unset snapshot_dir/snapshot_every")
+        if getattr(be, "supports_growth", True):
             self.index_manager = IndexManager(
-                self.backend, grow_watermark=cfg.grow_watermark,
+                self.pipeline, grow_watermark=cfg.grow_watermark,
                 growth_factor=cfg.growth_factor,
                 max_capacity=cfg.max_capacity,
                 snapshot_dir=cfg.snapshot_dir,
                 snapshot_every=cfg.snapshot_every,
                 max_snapshots=cfg.max_snapshots)
+        else:
+            self.index_manager = None        # capacity is fixed at init
         self.batcher = MicroBatcher(
             max_batch=cfg.max_batch, max_wait_ms=cfg.max_wait_ms,
             len_buckets=cfg.len_buckets, batch_buckets=cfg.batch_buckets,
             max_len=cfg.max_len)
         self.metrics = MetricsRegistry()
         self.executor = PipelinedExecutor(
-            self.backend, depth=cfg.pipeline_depth,
+            self.pipeline, depth=cfg.pipeline_depth,
             on_outcome=self._record_outcome)
         self._next_id = 0
         self._verdicts: dict[int, DocVerdict] = {}
+
+    @property
+    def backend(self):
+        """The serving pipeline (kept under the pre-PR-2 attribute name)."""
+        return self.pipeline
 
     # ------------------------------------------------------------ ingest
     def submit(self, docs, lengths=None) -> Ticket:
@@ -205,15 +234,20 @@ class DedupService:
     # ------------------------------------------------------------- stats
     def stats(self) -> dict:
         snap = self.metrics.snapshot()
-        count = self.backend.inserted       # host sync
+        backend_stats = self.pipeline.backend.stats()
+        # every built-in backend reports its admitted count; reuse it so a
+        # stats poll pays at most one host sync
+        count = backend_stats.get("count", self.pipeline.inserted)
         snap["index"] = {
+            "backend": self.pipeline.backend.name,
             "count": count,
-            "capacity": self.backend.capacity,
-            "occupancy": count / max(self.backend.capacity, 1),
+            "capacity": self.pipeline.capacity,
+            "occupancy": count / max(self.pipeline.capacity, 1),
             "grow_events": (self.index_manager.grow_events
                             if self.index_manager else 0),
             "snapshots": (self.index_manager.snapshots_taken
                           if self.index_manager else 0),
+            "backend_stats": backend_stats,
         }
         snap["batching"] = {
             "compiled_shapes": sorted(self.batcher.emitted_shapes),

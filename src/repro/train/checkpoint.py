@@ -108,8 +108,13 @@ def manifest(ckpt_dir: str, step: int) -> dict:
         return json.load(f)
 
 
-def restore(ckpt_dir: str, step: int, like_tree, *, shardings=None):
-    """Restore into the structure (and shardings) of `like_tree`."""
+def restore(ckpt_dir: str, step: int, like_tree, *, shardings=None,
+            device: bool = True):
+    """Restore into the structure (and shardings) of `like_tree`.
+
+    device=False keeps leaves as host numpy arrays with their saved dtypes
+    intact — required for host-side index state (e.g. uint64 LSH band keys,
+    which jnp.asarray would silently truncate to uint32 under 32-bit JAX)."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.msgpack")
     with open(path, "rb") as f:
         packed = msgpack.unpackb(f.read())
@@ -119,6 +124,8 @@ def restore(ckpt_dir: str, step: int, like_tree, *, shardings=None):
     if shardings is not None:
         sleaves = treedef.flatten_up_to(shardings)
         arrays = [jax.device_put(a, s) for a, s in zip(arrays, sleaves)]
-    else:
+    elif device:
         arrays = [jnp.asarray(a) for a in arrays]
+    else:
+        arrays = [np.array(a) for a in arrays]   # writable host copies
     return treedef.unflatten(arrays)

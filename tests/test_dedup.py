@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 from repro.baselines import (BruteForcePipeline, DPKPipeline, FlatLSHPipeline,
                              RawHNSWPipeline)
 from repro.baselines.base import pick_bands
-from repro.core.dedup import FoldConfig, FoldPipeline, _greedy_leader, bitmap_tau
+from repro.core.dedup import FoldConfig, FoldPipeline, bitmap_tau, greedy_leader
 from repro.data.corpus import DATASET_PRESETS, SyntheticCorpus
 
 CFG = DATASET_PRESETS["common_crawl"]
@@ -104,7 +104,7 @@ def test_greedy_leader_matches_python(seed):
     sim = rng.random((n, n)).astype(np.float32)
     sim = (sim + sim.T) / 2
     np.fill_diagonal(sim, 1.0)
-    got = np.asarray(_greedy_leader(jnp.asarray(sim), 0.6))
+    got = np.asarray(greedy_leader(jnp.asarray(sim), 0.6))
     keep = []
     exp = np.zeros(n, bool)
     for i in range(n):

@@ -1,0 +1,422 @@
+"""The pluggable dedup-backend API (repro.index): registry + protocol
+conformance, cross-backend parity against pre-refactor reference
+implementations, service integration, growth, and snapshot round-trips.
+
+The reference implementations below are deliberately naive numpy/Python
+ports of the standalone `process_batch` loops each baseline had before the
+PR-2 refactor — the parity tests pin the generic DedupPipeline + backend
+composition to those semantics on a seeded duplicate-dense stream.
+"""
+import math
+from collections import Counter, defaultdict
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.baselines.base import SignatureStage, band_keys, pick_bands
+from repro.core.dedup import FoldConfig, FoldPipeline
+from repro.data.corpus import DATASET_PRESETS, SyntheticCorpus
+from repro.index import (DedupPipeline, available, greedy_leader,
+                         greedy_leader_split, make, make_pipeline)
+
+TAU = 0.7
+H = 112
+FC = FoldConfig(capacity=2048, ef_construction=32, ef_search=32,
+                threshold_space="minhash")
+
+ALL_KEYS = {"hnsw", "hnsw_sharded", "hnsw_raw", "dpk", "flat_lsh",
+            "prefix_filter", "brute"}
+
+PROTOCOL_SURFACE = ("sig_spec", "order", "tau_batch", "tau_index",
+                    "capacity", "inserted", "batch_sim", "search", "insert",
+                    "grow", "save", "restore", "stats_schema", "stats")
+
+
+def _stream(n_batches=3, batch=64, dataset="common_crawl"):
+    src = SyntheticCorpus(DATASET_PRESETS[dataset])
+    return [src.next_batch(batch)[:2] for _ in range(n_batches)]
+
+
+def _run(pipe, batches):
+    return [np.asarray(pipe.process_batch(t, l)[0]) for t, l in batches]
+
+
+# --------------------------------------------------------------- registry
+def test_registry_lists_and_instantiates_every_backend():
+    assert ALL_KEYS <= set(available())
+    for key in sorted(ALL_KEYS):
+        be = make(key, cfg=FC)
+        assert be.name == key
+        for attr in PROTOCOL_SURFACE:
+            assert hasattr(be, attr), f"{key} lacks {attr}"
+        assert be.stats_schema() == tuple(be.stats().keys())
+        assert be.capacity > 0 and be.inserted == 0
+
+
+def test_registry_unknown_key_and_custom_registration():
+    with pytest.raises(KeyError, match="unknown dedup backend"):
+        make("no_such_backend")
+
+    import repro.index as ix
+
+    calls = {}
+
+    @ix.register("_test_backend")
+    def _factory(cfg, **opts):
+        calls["cfg"], calls["opts"] = cfg, opts
+        return make("brute", cfg=cfg)       # delegate for simplicity
+
+    try:
+        pipe = ix.make_pipeline("_test_backend", cfg=FC, flavor=3)
+        assert isinstance(pipe, DedupPipeline)
+        assert calls["cfg"] is FC and calls["opts"] == {"flavor": 3}
+    finally:
+        ix.registry._REGISTRY.pop("_test_backend")
+
+
+# ---------------------------------------------------- greedy leader sweep
+def test_greedy_leader_eligible_mask():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        n = int(rng.integers(2, 32))
+        sim = rng.random((n, n)).astype(np.float32)
+        sim = (sim + sim.T) / 2
+        np.fill_diagonal(sim, 1.0)
+        eligible = rng.random(n) < 0.6
+        keep, hit = (np.asarray(x) for x in
+                     greedy_leader_split(jnp.asarray(sim), 0.6,
+                                         eligible=eligible))
+        kept = []
+        for i in range(n):
+            h = any(sim[i, j] >= 0.6 for j in kept)
+            assert hit[i] == h
+            assert keep[i] == (eligible[i] and not h)
+            if keep[i]:
+                kept.append(i)
+    # default: all eligible — matches the classic sweep
+    got = np.asarray(greedy_leader(jnp.asarray(sim), 0.6))
+    exp = np.asarray(greedy_leader_split(jnp.asarray(sim), 0.6,
+                                         np.ones(n, bool))[0])
+    assert (got == exp).all()
+
+
+# -------------------------------- parity vs pre-refactor reference loops
+def _py_greedy(sim, tau):
+    n = len(sim)
+    keep = np.zeros(n, bool)
+    kept = []
+    for i in range(n):
+        if not any(sim[i, j] >= tau for j in kept):
+            keep[i] = True
+            kept.append(i)
+    return keep
+
+
+def _pair_sim(a, b):
+    return (a[:, None, :] == b[None, :, :]).mean(-1)
+
+
+class _RefDPK:
+    """Numpy port of the pre-refactor DPKPipeline.process_batch loop."""
+
+    def __init__(self, rebuild=True):
+        self.sig_stage = SignatureStage(H, 5, 0)
+        self.bands, self.rows = pick_bands(H, TAU)
+        self.rebuild = rebuild
+        self.store = np.zeros((1 << 14, H), np.uint32)
+        self.keys = np.zeros((1 << 14, self.bands), np.uint64)
+        self.n = 0
+        self.buckets = defaultdict(list)
+
+    def process_batch(self, tokens, lengths):
+        sigs = np.asarray(self.sig_stage(tokens, lengths))
+        keep_in = _py_greedy(_pair_sim(sigs, sigs), TAU)
+        if self.rebuild and self.n > 0:
+            self.buckets = defaultdict(list)
+            for i in range(self.n):
+                for k in self.keys[i]:
+                    self.buckets[int(k)].append(i)
+        qkeys = band_keys(sigs, self.bands, self.rows)
+        dup = np.zeros(len(sigs), bool)
+        for i in range(len(sigs)):
+            cand = []
+            for k in qkeys[i]:
+                cand.extend(self.buckets.get(int(k), ()))
+            if not cand:
+                continue
+            cand = np.unique(np.asarray(cand, np.int64))
+            sims = (self.store[cand] == sigs[i][None, :]).mean(axis=1)
+            dup[i] = bool((sims >= TAU).any())
+        keep = keep_in & ~dup
+        new_idx = np.flatnonzero(keep)
+        rows = np.arange(self.n, self.n + len(new_idx))
+        self.store[rows] = sigs[new_idx]
+        self.keys[rows] = qkeys[new_idx]
+        if not self.rebuild:
+            for r in rows:
+                for k in self.keys[r]:
+                    self.buckets[int(k)].append(int(r))
+        self.n += len(new_idx)
+        return keep
+
+
+class _RefFlat:
+    """Numpy port of the pre-refactor FlatLSHPipeline (topK budget)."""
+
+    def __init__(self, topk=4):
+        self.sig_stage = SignatureStage(H, 5, 0)
+        self.bands, self.rows = pick_bands(H, TAU)
+        self.topk = topk
+        self.store = np.zeros((1 << 14, H), np.uint32)
+        self.n = 0
+        self.buckets = defaultdict(list)
+
+    def process_batch(self, tokens, lengths):
+        sigs = np.asarray(self.sig_stage(tokens, lengths))
+        keep_in = _py_greedy(_pair_sim(sigs, sigs), TAU)
+        qkeys = band_keys(sigs, self.bands, self.rows)
+        dup = np.zeros(len(sigs), bool)
+        for i in range(len(sigs)):
+            cand = []
+            for k in qkeys[i]:
+                bucket = self.buckets.get(int(k))
+                if bucket:
+                    cand.extend(bucket)
+                    if len(cand) >= self.topk:
+                        break
+            if not cand:
+                continue
+            cand = np.unique(np.asarray(cand[: self.topk], np.int64))
+            sims = (self.store[cand] == sigs[i][None, :]).mean(axis=1)
+            dup[i] = bool((sims >= TAU).any())
+        keep = keep_in & ~dup
+        new_idx = np.flatnonzero(keep)
+        rows = np.arange(self.n, self.n + len(new_idx))
+        self.store[rows] = sigs[new_idx]
+        for r, i in zip(rows, new_idx):
+            for k in qkeys[i]:
+                self.buckets[int(k)].append(int(r))
+        self.n += len(new_idx)
+        return keep
+
+
+class _RefBrute:
+    """Numpy port of the pre-refactor BruteForcePipeline — the exact
+    quadratic online-admission reference."""
+
+    def __init__(self):
+        self.sig_stage = SignatureStage(H, 5, 0)
+        self.store = np.zeros((1 << 14, H), np.uint32)
+        self.n = 0
+
+    def process_batch(self, tokens, lengths):
+        sigs = np.asarray(self.sig_stage(tokens, lengths))
+        keep_in = _py_greedy(_pair_sim(sigs, sigs), TAU)
+        if self.n > 0:
+            sims = _pair_sim(sigs, self.store[: self.n])
+            dup = (sims >= TAU).any(axis=1)
+        else:
+            dup = np.zeros(len(sigs), bool)
+        keep = keep_in & ~dup
+        new = sigs[keep]
+        self.store[self.n:self.n + len(new)] = new
+        self.n += len(new)
+        return keep
+
+
+class _RefPrefix:
+    """Python port of the pre-refactor PrefixFilterPipeline sequential
+    one-pass join (INDEX_FIRST semantics + evolving token frequencies)."""
+
+    def __init__(self):
+        self.freq = Counter()
+        self.sets = []
+        self.inverted = defaultdict(list)
+
+    @staticmethod
+    def _shingle_sets(tokens, lengths):
+        from repro.core.shingle import shingle_hashes
+        sh = np.asarray(shingle_hashes(jnp.asarray(tokens, jnp.uint32),
+                                       jnp.asarray(lengths, jnp.int32), 5))
+        return [frozenset(int(x) for x in row if x != 0xFFFFFFFF)
+                for row in sh]
+
+    def _prefix(self, s):
+        if not s:
+            return []
+        ordered = sorted(s, key=lambda t: (self.freq[t], t))
+        p = len(s) - math.ceil(TAU * len(s)) + 1
+        return ordered[:max(p, 1)]
+
+    @staticmethod
+    def _jaccard(a, b):
+        if not a and not b:
+            return 1.0
+        return len(a & b) / len(a | b)
+
+    def process_batch(self, tokens, lengths):
+        sets = self._shingle_sets(tokens, lengths)
+        keep = np.zeros(len(sets), bool)
+        batch_admitted = []
+        for i, s in enumerate(sets):
+            cand_ids = set()
+            for tok in self._prefix(s):
+                cand_ids.update(self.inverted.get(tok, ()))
+            dup_corpus = any(self._jaccard(s, self.sets[j]) >= TAU
+                             for j in cand_ids)
+            dup_batch = any(self._jaccard(s, sets[j]) >= TAU
+                            for j in batch_admitted)
+            if not dup_batch and not dup_corpus:
+                keep[i] = True
+                batch_admitted.append(i)
+        for i in np.flatnonzero(keep):
+            s = sets[i]
+            self.freq.update(s)
+            doc_id = len(self.sets)
+            self.sets.append(s)
+            for tok in self._prefix(s):
+                self.inverted[tok].append(doc_id)
+        return keep
+
+
+@pytest.mark.parametrize("key,ref,opts", [
+    ("dpk", _RefDPK, {}),
+    ("dpk", lambda: _RefDPK(rebuild=False), {"rebuild": False}),
+    ("flat_lsh", lambda: _RefFlat(topk=4), {"topk": 4}),
+    ("brute", _RefBrute, {}),
+    ("prefix_filter", _RefPrefix, {}),
+])
+def test_backend_matches_pre_refactor_reference(key, ref, opts):
+    """Every ported backend through the generic DedupPipeline reproduces
+    its pre-refactor standalone verdicts exactly."""
+    batches = _stream(3, 64)
+    cfg = FoldConfig(capacity=1 << 14, tau=TAU)
+    pipe = make_pipeline(key, cfg=cfg, **opts)
+    got = _run(pipe, batches)
+    reference = ref()
+    exp = [reference.process_batch(t, l) for t, l in batches]
+    for c, (g, e) in enumerate(zip(got, exp)):
+        assert np.array_equal(g, e), f"{key} diverged at cycle {c}"
+    assert pipe.inserted == int(np.concatenate(exp).sum())
+
+
+def test_brute_backend_is_the_exact_recall_reference():
+    """'brute' stays the ground-truth labeler: its verdicts equal the
+    naive quadratic Python reference on a duplicate-dense stream."""
+    batches = _stream(3, 64, dataset="common_crawl")
+    got = np.concatenate(_run(make_pipeline(
+        "brute", cfg=FoldConfig(capacity=1 << 14, tau=TAU)), batches))
+    reference = _RefBrute()
+    exp = np.concatenate([reference.process_batch(t, l) for t, l in batches])
+    assert np.array_equal(got, exp)
+    assert (~exp).sum() > 0     # the stream actually contains duplicates
+
+
+def test_hnsw_backend_equals_foldpipeline():
+    """make_pipeline("hnsw") and the paper-facing FoldPipeline are the
+    same composition: identical verdicts on the same stream."""
+    batches = _stream(3, 64)
+    k1 = _run(make_pipeline("hnsw", cfg=FC), batches)
+    k2 = _run(FoldPipeline(FC), batches)
+    for g, e in zip(k1, k2):
+        assert np.array_equal(g, e)
+
+
+# -------------------------------------------------------- service serving
+@pytest.mark.parametrize("key", ["hnsw", "dpk", "flat_lsh"])
+def test_service_serves_backend_identically(key):
+    """AC: DedupService(backend=key) produces verdicts identical to the
+    standalone generic pipeline on the same stream."""
+    from repro.service import DedupService, ServiceConfig
+    batches = _stream(3, 64)
+    cfg = FoldConfig(capacity=2048, ef_construction=32, ef_search=32,
+                     threshold_space="minhash")
+
+    standalone = np.concatenate(_run(make_pipeline(key, cfg=cfg), batches))
+
+    svc = DedupService(ServiceConfig(
+        fold=cfg, backend=key, max_batch=64, max_wait_ms=0.0,
+        batch_buckets=(64,), max_len=512))
+    assert svc.pipeline.backend.name == key
+    tickets = [svc.submit(t, l) for t, l in batches]
+    served = np.asarray([v.admitted for tk in tickets
+                         for v in svc.results(tk)])
+    assert np.array_equal(served, standalone)
+    assert svc.stats()["index"]["count"] == int(standalone.sum())
+    assert svc.stats()["index"]["backend"] == key
+
+
+def test_service_growth_watermark_covers_numpy_backends():
+    """Satellite: the fixed numpy stores of the LSH/brute baselines used to
+    overflow silently; grow() puts them under the service watermark."""
+    from repro.service import DedupService, ServiceConfig
+    svc = DedupService(ServiceConfig(
+        fold=FoldConfig(capacity=64, tau=TAU), backend="dpk",
+        max_batch=32, max_wait_ms=0.0, batch_buckets=(32,),
+        grow_watermark=0.75, growth_factor=2.0))
+    src = SyntheticCorpus(DATASET_PRESETS["lm1b"])   # ~2% dups: fills fast
+    tickets = [svc.submit(*src.next_batch(32)[:2]) for _ in range(6)]
+    svc.flush()
+    admitted = sum(v.admitted for t in tickets for v in svc.results(t))
+    s = svc.stats()
+    assert s["index"]["grow_events"] >= 1
+    assert admitted == s["index"]["count"] > 64
+    assert s["index"]["capacity"] >= 128
+    # the grown store still detects what it admitted before growth
+    be = svc.pipeline.backend
+    assert (be.store[:be.n] != 0).any() and len(be.store) == s["index"]["capacity"]
+
+
+def test_direct_grow_preserves_verdicts():
+    """grow() is a pure re-alloc: duplicates of pre-growth admissions are
+    still caught afterwards (dpk + brute)."""
+    batches = _stream(2, 48)
+    for key in ("dpk", "brute"):
+        pipe = make_pipeline(key, cfg=FoldConfig(capacity=256, tau=TAU))
+        k1, _ = pipe.process_batch(*batches[0])
+        pipe.grow(1024)
+        assert pipe.capacity == 1024
+        k2, _ = pipe.process_batch(*batches[0])    # replay: all dups
+        assert k1.sum() > 0 and np.asarray(k2).sum() == 0, key
+
+
+# ------------------------------------------------- snapshots & round-trips
+@pytest.mark.parametrize("key", ["hnsw", "dpk", "brute", "prefix_filter"])
+def test_restore_then_grow_roundtrip(key):
+    """Satellite: snapshot at small capacity → restore into a larger
+    config → identical verdicts (and the restored index is grown to the
+    configured capacity)."""
+    import tempfile
+    batches = _stream(2, 48)
+    small = FoldConfig(capacity=256, ef_construction=16, ef_search=16,
+                       M=8, M0=16, tau=TAU, threshold_space="minhash")
+    big = FoldConfig(capacity=1024, ef_construction=16, ef_search=16,
+                     M=8, M0=16, tau=TAU, threshold_space="minhash")
+    with tempfile.TemporaryDirectory() as d:
+        pipe = make_pipeline(key, cfg=small)
+        pipe.process_batch(*batches[0])
+        pipe.save(d, step=1)
+
+        pipe2 = make_pipeline(key, cfg=big)
+        assert pipe2.restore(d, 1) == 1
+        assert pipe2.capacity == 1024           # grown back after the load
+        assert pipe2.inserted == pipe.inserted
+        keep_ref, _ = pipe.process_batch(*batches[1])
+        keep_got, _ = pipe2.process_batch(*batches[1])
+        assert np.array_equal(np.asarray(keep_got), np.asarray(keep_ref))
+        replay, _ = pipe2.process_batch(*batches[0])    # all dups
+        assert np.asarray(replay).sum() == 0
+
+
+def test_fold_snapshot_drops_dead_inserted_field(tmp_path):
+    """Satellite: FoldPipeline.save no longer writes the 'inserted' leaf
+    that restore() always ignored — the tree is exactly the HNSW state plus
+    the level-seed batch counter."""
+    import jax
+    pipe = FoldPipeline(FC)
+    pipe.process_batch(*_stream(1, 32)[0])
+    pipe.save(str(tmp_path), step=1)
+    from repro.train import checkpoint as ckpt
+    n_state_leaves = len(jax.tree.flatten(pipe.state)[0])
+    assert ckpt.manifest(str(tmp_path), 1)["n_arrays"] == n_state_leaves + 1

@@ -346,24 +346,24 @@ def test_service_backed_ingest():
 
 
 def test_sharded_backend_masked_step():
-    """The multi-shard routing facade honors padding masks and replay
-    (multi-device behaviour of the underlying step is covered in
-    test_dist.py::test_sharded_dedup_8dev)."""
-    from repro.service import ShardedDedupBackend
+    """The multi-shard fused backend honors padding masks and replay
+    through the generic pipeline surface (multi-device behaviour of the
+    underlying step is covered in test_dist.py::test_sharded_dedup_8dev)."""
+    from repro.index import make_pipeline
     cfg = FoldConfig(capacity=512, M=8, M0=16, ef_construction=16,
                      ef_search=16, threshold_space="minhash")
-    be = ShardedDedupBackend(cfg)          # single CPU device -> 1 shard
+    pipe = make_pipeline("hnsw_sharded", cfg=cfg)  # 1 CPU device -> 1 shard
     src = SyntheticCorpus(DATASET_PRESETS["common_crawl"])
     toks, lens, _ = src.next_batch(50)
-    sigs, bm, pcs = be.signatures(toks, lens)
+    sig = pipe.signatures(toks, lens)
     valid = np.ones(50, bool)
     valid[45:] = False
-    r1 = be.dedup_step(sigs, bm, pcs, valid=valid)
-    r2 = be.dedup_step(sigs, bm, pcs, valid=valid)   # replay: all dups
+    r1 = pipe.dedup_step(sig, valid=valid)
+    r2 = pipe.dedup_step(sig, valid=valid)   # replay: all dups
     k1, k2 = np.asarray(r1.keep), np.asarray(r2.keep)
     assert k1.sum() > 0 and not k1[45:].any()
     assert k2.sum() == 0
-    assert be.inserted == k1.sum() <= be.capacity
+    assert pipe.inserted == k1.sum() <= pipe.capacity
 
 
 def test_service_single_doc_requests():
