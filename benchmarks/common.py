@@ -28,14 +28,15 @@ _GRAPH_BACKENDS = ("hnsw", "hnsw_sharded", "hnsw_raw")
 
 
 def build_pipeline(backend: str, *, capacity: int | None = None, tau: float = 0.7,
-                   **opts):
+                   query_chunk: int | None = None, **opts):
     """Benchmark-standard pipeline construction through the repro.index
     registry: every backend gets the same signature stage and tau (in
     MinHash space, the cross-backend comparison space), HNSW params scaled
-    for the CPU container."""
+    for the CPU container. query_chunk feeds FoldConfig (None = derive a
+    default from capacity; only the HNSW-organized backends consume it)."""
     cap = capacity or (8192 if backend in _GRAPH_BACKENDS else 1 << 14)
     cfg = FoldConfig(capacity=cap, tau=tau, ef_construction=48, ef_search=48,
-                     threshold_space="minhash")
+                     threshold_space="minhash", query_chunk=query_chunk)
     return make_pipeline(backend, cfg=cfg, **opts)
 
 

@@ -19,17 +19,18 @@ import sys
 
 SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
             "fig9_largescale", "table3_collisions", "appendix_hamming",
-            "dist_scaling", "service_throughput", "roofline"]
+            "dist_scaling", "service_throughput", "search_mem", "roofline"]
 
 
-def run_backend(name: str, quick: bool = False):
+def run_backend(name: str, quick: bool = False,
+                query_chunk: int | None = None):
     """Continuous-ingestion benchmark of one registry backend: per-doc
     latency, stage breakdown, and recall vs the brute-force reference."""
     from benchmarks.common import build_pipeline, recall_fp, run_pipeline
     cycles, batch = (3, 256) if quick else (5, 512)
     ref_keep, _ = run_pipeline(build_pipeline("brute"),
                                cycles=cycles, batch=batch)
-    keep, stats = run_pipeline(build_pipeline(name),
+    keep, stats = run_pipeline(build_pipeline(name, query_chunk=query_chunk),
                                cycles=cycles, batch=batch)
     rec, fp = recall_fp(ref_keep, keep)
     last = stats[-1]
@@ -53,11 +54,15 @@ def main() -> None:
     ap.add_argument("--backend", default=None,
                     help="benchmark one registered repro.index backend "
                          "instead of the paper sections")
+    ap.add_argument("--query-chunk", type=int, default=None,
+                    help="batched-search chunk for the --backend run "
+                         "(unset = capacity-derived default, 0 = unchunked)")
     args = ap.parse_args()
 
     if args.backend:
         print("name,us_per_call,derived")
-        for r in run_backend(args.backend, quick=args.quick):
+        for r in run_backend(args.backend, quick=args.quick,
+                             query_chunk=args.query_chunk):
             print(",".join(str(x) for x in r), flush=True)
         return
 

@@ -1,0 +1,99 @@
+"""Search memory/throughput micro-bench: packed visited bitset + default
+query chunking vs the historical (Q, capacity) bool-mask search.
+
+The acceptance axis of the memory-lean search rewrite (ISSUE 4): at 1e5+
+capacity the batched search must hold a bounded visited working set —
+measured here three ways on the same seeded index:
+
+  * analytic visited-state bytes (exact from shapes: the (Q, cap) bool mask
+    vs the chunked (chunk, ceil(cap/32)) uint32 bitset),
+  * XLA's compiled temp allocation (compile-time truth, when the backend
+    exposes memory_analysis), and
+  * wall-clock throughput, with a bit-identity check between the two
+    configurations (the rewrite is a representation change, not a
+    semantics change).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitmap import pack_bitmaps, popcount
+from repro.core.bitset import bitset_nbytes
+from repro.core.hnsw import (HNSWConfig, auto_query_chunk, hnsw_init,
+                             hnsw_insert_batch, hnsw_search, sample_levels)
+
+
+def _temp_bytes(cfg, state, queries, k, query_chunk):
+    """Compiled temp allocation of the search program (None if the backend
+    does not expose memory stats)."""
+    try:
+        lowered = hnsw_search.lower(cfg, state, queries, k=k,
+                                    query_chunk=query_chunk)
+        return int(lowered.compile().memory_analysis().temp_size_in_bytes)
+    except Exception:
+        return None
+
+
+def _timed(cfg, state, queries, k, query_chunk, reps=3):
+    ids, sims = hnsw_search(cfg, state, queries, k=k,
+                            query_chunk=query_chunk)  # compile + warm
+    ids.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ids, sims = hnsw_search(cfg, state, queries, k=k,
+                                query_chunk=query_chunk)
+        ids.block_until_ready()
+    dt = (time.perf_counter() - t0) / reps
+    return np.asarray(ids), np.asarray(sims), dt
+
+
+def run(quick: bool = False):
+    capacity = (1 << 15) if quick else 100_000
+    n_docs, Q, k = ((512, 1024, 4) if quick else (1024, 2048, 4))
+    rng = np.random.default_rng(0)
+    sigs = rng.integers(0, 2**32, (n_docs, 112), dtype=np.uint32)
+    vecs = pack_bitmaps(jnp.asarray(sigs), T=2048)
+    pcs = popcount(vecs)
+
+    packed = HNSWConfig(capacity=capacity, words=vecs.shape[1], M=12, M0=24,
+                        ef_construction=32, ef_search=32, max_level=3)
+    legacy = packed._replace(packed_visited=False)
+    state = hnsw_init(packed)
+    state, _ = hnsw_insert_batch(packed, state, vecs, pcs,
+                                 jnp.asarray(sample_levels(n_docs, packed)),
+                                 jnp.ones(n_docs, bool))
+    queries = pack_bitmaps(jnp.asarray(
+        rng.integers(0, 2**32, (Q, 112), dtype=np.uint32)), T=2048)
+
+    chunk = auto_query_chunk(packed)
+    live = min(chunk, Q)
+    # analytic visited state: what the search must hold live for Q queries
+    bytes_legacy = Q * capacity                      # (Q, cap) bool, unchunked
+    bytes_packed = live * bitset_nbytes(capacity)    # (chunk, cap/32) u32
+    ratio = bytes_legacy / max(bytes_packed, 1)
+
+    ids_p, sims_p, dt_p = _timed(packed, state, queries, k, None)
+    ids_b, sims_b, dt_b = _timed(legacy, state, queries, k, 0)
+    identical = (np.array_equal(ids_p, ids_b)
+                 and np.array_equal(sims_p, sims_b))
+    assert identical, "packed/chunked search diverged from bool/unchunked"
+
+    tmp_p = _temp_bytes(packed, state, queries, k, None)
+    tmp_b = _temp_bytes(legacy, state, queries, k, 0)
+    tmp = (f";temp_packed={tmp_p >> 20}MiB;temp_bool={tmp_b >> 20}MiB"
+           if tmp_p and tmp_b else "")
+
+    rows = [
+        ("search_mem/visited_state", 0.0,
+         f"capacity={capacity};chunk={chunk};bool={bytes_legacy >> 20}MiB;"
+         f"packed={max(bytes_packed, 1) >> 10}KiB;mem_ratio={ratio:.1f}x"),
+        ("search_mem/packed_chunked", round(dt_p / Q * 1e6, 2),
+         f"qps={Q / dt_p:.0f};identical={identical}{tmp}"),
+        ("search_mem/bool_unchunked", round(dt_b / Q * 1e6, 2),
+         f"qps={Q / dt_b:.0f};speedup={dt_b / dt_p:.2f}x"),
+    ]
+    return rows

@@ -1,0 +1,63 @@
+"""Packed uint32 bitset: the memory-lean visited set for batched HNSW search.
+
+The batched search used to carry a (capacity,) bool visited mask per query —
+one BYTE per corpus slot, i.e. a (Q, capacity) working set that the
+core/hnsw.py docstring itself called "terabytes" at ingest scale. Packing
+32 slots per uint32 word cuts that state 8x ((capacity+31)//32 words) and
+keeps every visited-set operation a vectorized shift/mask — the same
+bit-twiddling diet as the XOR+popcount distance kernel, so nothing here
+fights the VPU.
+
+The only subtlety is the scatter: XLA has no scatter-OR, so `bitset_add`
+builds the OR through `at[...].add`. That is exact if and only if every
+(word, bit) pair added in one call is fresh (currently 0) and unique — which
+the search loop guarantees by construction: candidate ids are deduplicated
+(first-occurrence mask after a sort) and filtered through `bitset_test`
+before being added. The contract is asserted in tests/test_hnsw.py by
+bit-identical parity against the plain bool-mask implementation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["bitset_words", "bitset_zeros", "bitset_test", "bitset_add",
+           "bitset_nbytes"]
+
+
+def bitset_words(capacity: int) -> int:
+    """Number of uint32 words backing a `capacity`-slot bitset."""
+    return (capacity + 31) // 32
+
+
+def bitset_nbytes(capacity: int) -> int:
+    """Bytes of visited state per query (the 8x-vs-bool headline number)."""
+    return bitset_words(capacity) * 4
+
+
+def bitset_zeros(capacity: int) -> jnp.ndarray:
+    """Empty bitset: ((capacity+31)//32,) uint32."""
+    return jnp.zeros((bitset_words(capacity),), jnp.uint32)
+
+
+def bitset_test(bs: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Membership mask for `ids` (any shape, int32). ids < 0 -> False."""
+    safe = jnp.maximum(ids, 0)
+    word = safe >> 5
+    bit = (safe & 31).astype(jnp.uint32)
+    return (((bs[word] >> bit) & 1) > 0) & (ids >= 0)
+
+
+def bitset_add(bs: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Set the bit of every id where `mask` is True.
+
+    CONTRACT: masked ids must be unique and not yet set (the caller derives
+    `mask` from `~bitset_test(...)` plus a first-occurrence dedup), so the
+    add-scatter below lands each power of two exactly once per word and is
+    equivalent to a scatter-OR. Masked-out ids contribute 0 and may repeat.
+    """
+    safe = jnp.maximum(ids, 0)
+    word = safe >> 5
+    bit = (safe & 31).astype(jnp.uint32)
+    contrib = jnp.where(mask, jnp.uint32(1) << bit, jnp.uint32(0))
+    return bs.at[word].add(contrib)

@@ -67,6 +67,11 @@ class FoldConfig:
     ef_construction: int = 64
     ef_search: int = 64
     max_level: int = 4
+    # batched-search chunking: None = derive from capacity (bound the
+    # per-search visited working set), 0 = never chunk, N = chunk at N.
+    # Reaches every HNSW-organized backend (hnsw, hnsw_raw, hnsw_sharded)
+    # and the service via ServiceConfig.backend_opts={"query_chunk": N}.
+    query_chunk: int | None = None
     # ablation arms (Fig. 8)
     use_kernel: bool = True              # 'SIMD' arm -> Pallas kernel path
     cached: bool = True                  # popcount-cache arm
@@ -79,7 +84,8 @@ class FoldConfig:
                           ef_construction=self.ef_construction,
                           ef_search=self.ef_search, max_level=self.max_level,
                           metric="bitmap_jaccard",
-                          select_heuristic=self.select_heuristic)
+                          select_heuristic=self.select_heuristic,
+                          query_chunk=self.query_chunk)
 
 
 def bitmap_tau(cfg: FoldConfig) -> float:

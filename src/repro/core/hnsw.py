@@ -15,12 +15,28 @@ Search is the standard greedy-descent + bounded beam, expressed as
 paper's `efSearch` is literally the expansion budget of the loop — matching
 its framing of efSearch as "the number of candidates explored".
 
-The per-hop hot loop — distances from the query to the M0 neighbors of the
-expanded node — is exactly the bitmap-Jaccard XOR+popcount computation that
+Memory/throughput shape of the beam loop (this file's hot path):
+
+  * the per-query visited set is a PACKED uint32 bitset ((cap+31)//32
+    words, core/bitset.py) — 8x smaller than the historical (cap,) bool
+    mask; `HNSWConfig.packed_visited=False` keeps the bool variant for
+    the bit-identical parity tests;
+  * each `while_loop` step expands a FRONTIER of up to `HNSWConfig.frontier`
+    beam nodes at once, gathering all frontier*M0 neighbor rows and scoring
+    them in one fused XOR+popcount distance call (the same tiled shape
+    kernels/bitmap_jaccard.py runs on the VPU) instead of dribbling M0 rows
+    per step; the efSearch budget counts EXPANSIONS, so the total work is
+    unchanged — it is just batched into VPU-sized calls;
+  * batched search is CHUNKED BY DEFAULT: `hnsw_search` derives a sane
+    `query_chunk` from the capacity when the knob is unset, bounding the
+    live visited state at (chunk, (cap+31)//32) words regardless of Q.
+
+The per-hop hot loop — distances from the query to the gathered neighbor
+rows — is exactly the bitmap-Jaccard XOR+popcount computation that
 kernels/bitmap_jaccard.py tiles for the VPU. Inside the (vmapped) search we
-use the fused jnp form (single-row vs M0 rows is too small for a kernel
-launch per hop); the kernel carries the bulk paths (in-batch dedup, flat
-scoring, distributed shard scan).
+use the fused jnp form (a frontier gather is one VPU-sized call, too small
+for a kernel launch per hop); the kernel carries the bulk paths (in-batch
+dedup, flat scoring, distributed shard scan).
 
 Three metrics, selected statically (paper §3.2's three-way comparison):
   bitmap_jaccard  — FOLD: D = 2 px / (pa + pb + px)
@@ -36,12 +52,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bitset import (bitset_add, bitset_nbytes, bitset_test,
+                               bitset_zeros)
+
 __all__ = ["HNSWConfig", "HNSWState", "hnsw_init", "hnsw_grow",
-           "hnsw_insert_batch", "hnsw_search", "sample_levels", "METRICS"]
+           "hnsw_insert_batch", "hnsw_search", "sample_levels", "METRICS",
+           "auto_query_chunk", "visited_nbytes"]
 
 METRICS = ("bitmap_jaccard", "minhash_jaccard", "hamming")
 
 _INF = jnp.float32(jnp.inf)
+
+# target for the per-chunk visited state of a batched search; the auto
+# query_chunk is sized so chunk * visited_nbytes(cfg) stays under this
+_VISITED_BUDGET_BYTES = 16 << 20
 
 
 class HNSWConfig(NamedTuple):
@@ -58,6 +82,17 @@ class HNSWConfig(NamedTuple):
     # selected neighbor. Improves recall in duplicate-dense clusters (the
     # paper's hardest regime) at a small construction cost.
     select_heuristic: bool = False
+    # beam nodes expanded per while_loop step: each step gathers
+    # frontier*M0 neighbor rows and scores them in one fused distance call.
+    # The efSearch budget counts expansions, not steps, so recall semantics
+    # are frontier-independent to first order.
+    frontier: int = 4
+    # visited-set representation: packed uint32 bitset (8x smaller) vs the
+    # historical (capacity,) bool mask. Kept switchable for the parity tests.
+    packed_visited: bool = True
+    # default query chunking for batched search: None = derive from capacity
+    # (bound the visited working set), 0 = never chunk, N = chunk at N.
+    query_chunk: int | None = None
 
     @property
     def ml(self) -> float:
@@ -72,6 +107,31 @@ class HNSWState(NamedTuple):
     entry: jnp.ndarray        # () int32
     top_level: jnp.ndarray    # () int32
     count: jnp.ndarray        # () int32
+
+
+def visited_nbytes(cfg: HNSWConfig) -> int:
+    """Per-query visited-set bytes under the configured representation."""
+    return bitset_nbytes(cfg.capacity) if cfg.packed_visited else cfg.capacity
+
+
+def auto_query_chunk(cfg: HNSWConfig) -> int:
+    """Pick a query_chunk bounding the batched-search visited state.
+
+    Sized so chunk * visited_nbytes stays under ~16 MiB, clamped to
+    [64, 4096] and rounded down to a power of two (shape reuse across
+    batch sizes). At small capacities the clamp disables chunking for
+    typical service batches; at 1e6+ slots it kicks in hard — which is
+    exactly where the historical (Q, capacity) bool mask exploded.
+
+    The 64-query floor is a throughput guard (narrower vmapped chunks
+    waste the VPU), so past ~2M slots (packed) the budget is best-effort:
+    live visited state grows linearly again at 64 * visited_nbytes —
+    still 8x under the bool mask. Pass query_chunk explicitly to trade
+    throughput for a harder memory bound.
+    """
+    per_q = max(visited_nbytes(cfg), 1)
+    chunk = max(_VISITED_BUDGET_BYTES // per_q, 1)
+    return int(min(4096, max(64, 1 << (chunk.bit_length() - 1))))
 
 
 def hnsw_init(cfg: HNSWConfig) -> HNSWState:
@@ -129,6 +189,32 @@ def sample_levels(n: int, cfg: HNSWConfig, seed: int = 0) -> np.ndarray:
     return np.minimum(lv, cfg.max_level)
 
 
+# ------------------------------------------------------------- visited set
+# Thin dispatch over the two visited-set representations. The packed path
+# is the production default; the bool path exists so the parity tests can
+# assert bit-identical (ids, sims) between the two.
+def _visited_new(cfg: HNSWConfig) -> jnp.ndarray:
+    if cfg.packed_visited:
+        return bitset_zeros(cfg.capacity)
+    return jnp.zeros((cfg.capacity,), jnp.bool_)
+
+
+def _visited_test(cfg: HNSWConfig, vs, ids) -> jnp.ndarray:
+    if cfg.packed_visited:
+        return bitset_test(vs, ids)
+    return vs[jnp.maximum(ids, 0)] & (ids >= 0)
+
+
+def _visited_add(cfg: HNSWConfig, vs, ids, mask) -> jnp.ndarray:
+    """Mark masked ids visited. Masked ids must be unique and unvisited
+    (the bitset_add contract); masked-out ids may repeat freely."""
+    if cfg.packed_visited:
+        return bitset_add(vs, ids, mask)
+    # scatter-max is duplicate-safe (bool max == OR), unlike scatter-set
+    # whose winner among duplicate indices is unspecified
+    return vs.at[jnp.maximum(ids, 0)].max(mask)
+
+
 # ----------------------------------------------------------------- distance
 def _dist_rows(cfg: HNSWConfig, q: jnp.ndarray, qpc: jnp.ndarray,
                vecs: jnp.ndarray, pcs: jnp.ndarray) -> jnp.ndarray:
@@ -181,43 +267,65 @@ def _search_layer(cfg, state, q, qpc, level: int, ef: int,
                   init_ids, init_dists, visited):
     """Bounded beam search at one (static) level.
 
-    init_ids/init_dists: (E,) seeds (-1 = empty). Returns beam of size ef
-    (ids, dists) sorted ascending by distance, plus updated visited mask.
-    `ef` doubles as the expansion budget — the paper's efSearch semantics.
+    init_ids/init_dists: (E,) seeds (-1 = empty, ids must be distinct).
+    Returns beam of size ef (ids, dists) sorted ascending by distance, plus
+    the updated visited set. `ef` is the EXPANSION budget — the paper's
+    efSearch semantics — independent of how many nodes one while_loop step
+    expands: each step pops the `F = min(cfg.frontier, ef)` closest
+    unexpanded beam nodes, gathers their F*M0 neighbor rows, and scores the
+    fresh ones in one fused distance call.
     """
     E = init_ids.shape[0]
     pad = ef - E
     assert pad >= 0, "ef must be >= number of seeds"
+    F = max(1, min(cfg.frontier, ef))
+    M0 = cfg.M0
     beam_ids = jnp.concatenate([init_ids, jnp.full((pad,), -1, jnp.int32)])
     beam_d = jnp.concatenate([init_dists, jnp.full((pad,), jnp.inf, jnp.float32)])
     expanded = beam_ids < 0  # empty slots can never be selected
-    visited = visited.at[jnp.maximum(init_ids, 0)].set(
-        visited[jnp.maximum(init_ids, 0)] | (init_ids >= 0))
+    visited = _visited_add(cfg, visited, init_ids, init_ids >= 0)
 
     def cond(c):
-        beam_ids, beam_d, expanded, visited, steps = c
-        return jnp.any(~expanded) & (steps < ef)
+        beam_ids, beam_d, expanded, visited, n_exp, steps = c
+        # steps mirrors n_exp (>= 1 expansion per step) and is a hard
+        # termination bound should a no-progress state ever arise
+        return jnp.any(~expanded) & (n_exp < ef) & (steps < ef)
 
     def body(c):
-        beam_ids, beam_d, expanded, visited, steps = c
-        sel = jnp.argmin(jnp.where(expanded, jnp.inf, beam_d))
-        nid = beam_ids[sel]
-        expanded = expanded.at[sel].set(True)
-        nbrs = state.neighbors[level, jnp.maximum(nid, 0)]   # (M0,)
-        safe = jnp.maximum(nbrs, 0)
-        fresh = (nbrs >= 0) & ~visited[safe]
-        visited = visited.at[safe].set(visited[safe] | fresh)
-        d = jnp.where(fresh, _dist_ids(cfg, state, q, qpc, nbrs), jnp.inf)
+        beam_ids, beam_d, expanded, visited, n_exp, steps = c
+        # pop the F closest unexpanded beam nodes (clipped to the budget).
+        # Selection is by distance but expansion eligibility is NOT gated
+        # on finiteness: an inf-distance seed (search on an empty index)
+        # must still be expanded or the loop would never make progress.
+        masked = jnp.where(expanded, jnp.inf, beam_d)
+        neg, sel = jax.lax.top_k(-masked, F)
+        can = ~expanded[sel] & (jnp.arange(F) < (ef - n_exp))
+        expanded = expanded.at[sel].set(expanded[sel] | can)
+        fids = jnp.where(can, beam_ids[sel], -1)
+        # gather all frontier adjacency rows -> one (F*M0,) candidate list
+        nbrs = state.neighbors[level, jnp.maximum(fids, 0)]      # (F, M0)
+        nbrs = jnp.where((fids >= 0)[:, None], nbrs, -1).reshape(-1)
+        # two frontier nodes may share a neighbor: dedup via sort +
+        # first-occurrence so each id enters the beam (and the visited
+        # scatter) at most once
+        order = jnp.argsort(nbrs)
+        snb = nbrs[order]
+        first = jnp.concatenate([jnp.ones((1,), bool), snb[1:] != snb[:-1]])
+        fresh = first & (snb >= 0) & ~_visited_test(cfg, visited, snb)
+        visited = _visited_add(cfg, visited, snb, fresh)
+        # one fused XOR+popcount distance call over the whole gather
+        d = jnp.where(fresh, _dist_ids(cfg, state, q, qpc, snb), jnp.inf)
         # merge beam with fresh neighbors, keep top-ef by distance
-        cat_ids = jnp.concatenate([beam_ids, jnp.where(fresh, nbrs, -1)])
+        cat_ids = jnp.concatenate([beam_ids, jnp.where(fresh, snb, -1)])
         cat_d = jnp.concatenate([beam_d, d])
-        cat_exp = jnp.concatenate([expanded, jnp.full(nbrs.shape, False)])
-        neg, idxs = jax.lax.top_k(-cat_d, ef)
-        return (cat_ids[idxs], -neg, cat_exp[idxs] | (cat_ids[idxs] < 0),
-                visited, steps + 1)
+        cat_exp = jnp.concatenate([expanded, jnp.zeros((F * M0,), jnp.bool_)])
+        neg2, idxs = jax.lax.top_k(-cat_d, ef)
+        return (cat_ids[idxs], -neg2, cat_exp[idxs] | (cat_ids[idxs] < 0),
+                visited, n_exp + jnp.sum(can, dtype=jnp.int32), steps + 1)
 
-    beam_ids, beam_d, _, visited, _ = jax.lax.while_loop(
-        cond, body, (beam_ids, beam_d, expanded, visited, jnp.int32(0)))
+    beam_ids, beam_d, _, visited, _, _ = jax.lax.while_loop(
+        cond, body, (beam_ids, beam_d, expanded, visited, jnp.int32(0),
+                     jnp.int32(0)))
     order = jnp.argsort(beam_d)
     return beam_ids[order], beam_d[order], visited
 
@@ -237,24 +345,33 @@ def _descend(cfg, state, q, qpc, stop_level: jnp.ndarray):
 # ------------------------------------------------------------------- search
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "ef", "query_chunk"))
 def hnsw_search(cfg: HNSWConfig, state: HNSWState, queries: jnp.ndarray,
-                k: int, ef: int | None = None, query_chunk: int = 0):
+                k: int, ef: int | None = None,
+                query_chunk: int | None = None):
     """Batched kNN search.
 
     queries: (Q, W) uint32. Returns (ids (Q, k) int32, sims (Q, k) f32);
     missing results have id -1 and sim -inf. Similarity = 1 - distance for
-    all three metrics (each distance is normalized to [0, 1]).
+    all three metrics (each distance is normalized to [0, 1]). ef is clamped
+    to >= k so the result always has k columns.
 
-    query_chunk > 0 bounds peak memory: the vmapped search allocates a
-    (Q, capacity) visited mask, which at ingest scale (1e5 queries x 1e6
-    slots) is terabytes; chunking runs lax.map over (Q/chunk) vmapped
-    chunks, so the working set is (chunk, capacity). See EXPERIMENTS.md
-    §Perf (fold_dedup iteration 1).
+    Chunked execution is the DEFAULT: the vmapped search carries a
+    (Q, visited) working set — historically a (Q, capacity) bool mask,
+    which at ingest scale (1e5 queries x 1e6 slots) is terabytes; now a
+    packed (Q, (capacity+31)//32) uint32 bitset, and Q is bounded by
+    running lax.map over (Q/chunk) vmapped chunks. query_chunk resolution:
+    an explicit argument wins, else cfg.query_chunk, else a capacity-derived
+    default (auto_query_chunk); 0 disables chunking. Chunking never changes
+    results — benchmarks/search_mem.py measures the memory/throughput.
     """
     ef = cfg.ef_search if ef is None else ef
+    ef = max(ef, k)      # k columns are promised regardless of the budget
+    if query_chunk is None:
+        query_chunk = (cfg.query_chunk if cfg.query_chunk is not None
+                       else auto_query_chunk(cfg))
     qpcs = jnp.sum(jax.lax.population_count(queries).astype(jnp.int32), -1)
 
     def one(q, qpc):
-        visited = jnp.zeros((cfg.capacity,), jnp.bool_)
+        visited = _visited_new(cfg)
         cur, curd = _descend(cfg, state, q, qpc, jnp.int32(0))
         ids, d, _ = _search_layer(cfg, state, q, qpc, 0, ef,
                                   cur[None], curd[None], visited)
@@ -369,7 +486,7 @@ def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
 
             def do(carry, lev=lev, m_l=m_l):
                 st, s_ids, s_d = carry
-                visited = jnp.zeros((cfg.capacity,), jnp.bool_)
+                visited = _visited_new(cfg)
                 cand_ids, cand_d, _ = _search_layer(
                     cfg, st, vec, pc, lev, cfg.ef_construction,
                     s_ids, s_d, visited)
@@ -395,16 +512,26 @@ def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
                       pcs: jnp.ndarray, levels: jnp.ndarray,
-                      mask: jnp.ndarray) -> HNSWState:
+                      mask: jnp.ndarray) -> tuple[HNSWState, jnp.ndarray]:
     """Sequentially insert a batch (deterministic order). mask=False skips.
 
     vecs: (B, W) uint32; pcs: (B,) int32; levels: (B,) int32 (pre-sampled);
     mask: (B,) bool — only True rows are inserted (duplicates stay out).
-    """
-    def body(i, st):
-        def do(st):
-            return _insert_one(cfg, st, vecs[i], pcs[i], levels[i])
-        full = st.count >= cfg.capacity
-        return jax.lax.cond(mask[i] & ~full, do, lambda s: s, st)
 
-    return jax.lax.fori_loop(0, vecs.shape[0], body, state)
+    Returns (state, n_inserted) where n_inserted is a () int32 device scalar
+    counting the rows ACTUALLY inserted. When the index is full, masked rows
+    are skipped — n_inserted < mask.sum() is the caller's overflow signal;
+    the `repro.index` backends refuse the batch rather than let a verdict
+    claim admission for a dropped row (see DedupBackend.insert).
+    """
+    def body(i, carry):
+        st, n = carry
+
+        def do(c):
+            st, n = c
+            return _insert_one(cfg, st, vecs[i], pcs[i], levels[i]), n + 1
+
+        full = st.count >= cfg.capacity
+        return jax.lax.cond(mask[i] & ~full, do, lambda c: c, (st, n))
+
+    return jax.lax.fori_loop(0, vecs.shape[0], body, (state, jnp.int32(0)))

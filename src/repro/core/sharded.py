@@ -61,7 +61,8 @@ def sharded_state_specs(mesh: Mesh, axis: str = "data"):
 
 def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
                             k: int = 4, axis: str = "data",
-                            query_chunk: int = 0, sub_batches: int = 1,
+                            query_chunk: int | None = None,
+                            sub_batches: int = 1,
                             masked: bool = False):
     """Returns jit-able `step(states, bitmaps, pcs, levels) -> (states, keep)`.
 
@@ -72,8 +73,9 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
     paper's Fig. 9 protocol: 100K streaming docs processed in 10K batches):
     slice j is deduped against the index that already contains slices < j,
     bounding the quadratic in-batch work and the search working set.
-    query_chunk bounds the (chunk, capacity) visited masks of the batched
-    HNSW search (see EXPERIMENTS.md §Perf).
+    query_chunk bounds the (chunk, visited-words) working set of the batched
+    HNSW search; None defers to hnsw_search's resolution (cfg.query_chunk,
+    else a capacity-derived default), 0 disables chunking.
 
     masked=True adds a 5th argument `valid (B,) bool` (sharded like the
     batch): False rows are shape padding from the serving micro-batcher —
@@ -99,7 +101,7 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
             keep = keep & va
         # (5) round-robin shard assignment for admitted docs
         mine = (jnp.arange(B, dtype=jnp.int32) % nshards) == my
-        state = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine)
+        state, _ = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine)
         return state, keep, keep_in
 
     def local(state, bitmaps, pcs, levels, valid=None):

@@ -68,6 +68,11 @@ class BruteForceBackend:
 
     def insert(self, sig: SigBatch, keep) -> None:
         new = np.asarray(sig.sigs)[np.asarray(keep)]
+        if self.n + len(new) > self.capacity:
+            raise RuntimeError(
+                f"brute store full: {self.n} of {self.capacity} rows used "
+                f"and the batch admits {len(new)} more; call grow() — "
+                f"refusing to silently drop admitted docs")
         self.store[self.n:self.n + len(new)] = new
         self.n += len(new)
 

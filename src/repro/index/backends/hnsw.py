@@ -28,7 +28,7 @@ __all__ = ["HNSWBitmapBackend", "RawHNSWBackend"]
 
 
 class _HNSWLifecycle:
-    """Shared functional-HNSW capacity lifecycle.
+    """Shared functional-HNSW capacity lifecycle + overflow refusal.
 
     Subclasses provide `cfg` (FoldConfig), `hnsw_cfg`, `state`, and a
     `_batches` level-seed counter; hooks cover any side containers that
@@ -38,6 +38,37 @@ class _HNSWLifecycle:
     hnsw_cfg: HNSWConfig
     state: HNSWState
     _batches: int
+
+    # sync-free occupancy upper bound (mirrors ShardedDedupBackend): the
+    # true count is a device scalar, so we only pay a host sync when the
+    # bound says the incoming batch might not fit
+    _known_count: int = 0
+    _dispatched_bound: int = 0
+
+    # -- overflow refusal ----------------------------------------------------
+    def _guard_capacity(self, keep) -> None:
+        """Refuse an insert that could overflow the fixed-capacity index.
+
+        hnsw_insert_batch silently skips rows once full — acceptable for the
+        raw primitive, but a protocol backend must never return a keep-mask
+        whose verdicts claim admission for dropped rows. Standalone (non-
+        IndexManager) use therefore fails loudly here; under the service the
+        growth watermark re-allocates ahead of this guard ever tripping."""
+        B = int(keep.shape[0])
+        cap = self.hnsw_cfg.capacity
+        if self._known_count + self._dispatched_bound + B <= cap:
+            self._dispatched_bound += B
+            return
+        self._known_count = self.inserted          # host sync (rare)
+        self._dispatched_bound = 0
+        n_keep = int(np.asarray(keep).sum())
+        if self._known_count + n_keep > cap:
+            raise RuntimeError(
+                f"HNSW index full: {self._known_count} of {cap} slots used "
+                f"and the batch admits {n_keep} more; call grow() (or run "
+                f"under the service's IndexManager growth watermark) before "
+                f"inserting — refusing to silently drop admitted docs")
+        self._dispatched_bound = B
 
     # -- hooks ---------------------------------------------------------------
     def _after_grow(self, new_capacity: int) -> None:
@@ -102,6 +133,10 @@ class _HNSWLifecycle:
         self._take_extra(got)
         if target > cap:
             self.grow(target)
+        # re-anchor the overflow guard's sync-free bound on the restored
+        # occupancy (it must stay an UPPER bound of the true count)
+        self._known_count = self.inserted
+        self._dispatched_bound = 0
         return step
 
 
@@ -177,14 +212,19 @@ class HNSWBitmapBackend(_HNSWLifecycle):
         levels = jnp.asarray(sample_levels(
             B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
         self._batches += 1
+        # refuse BEFORE any state mutation: once past the guard, every keep
+        # row is guaranteed a slot, so the sig-store append below stays in
+        # lockstep with the device insert (no desync on partial inserts)
+        self._guard_capacity(keep)
         if self._sig_store is not None:
             # host-side store append must know the pre-insert count (sync)
             start = self.inserted
             order = np.flatnonzero(np.asarray(keep))
             self._sig_store[start:start + len(order)] = \
                 np.asarray(sig.sigs)[order]
-        self.state = hnsw_insert_batch(self.hnsw_cfg, self.state, sig.bitmaps,
-                                       sig.pcs, levels, jnp.asarray(keep))
+        self.state, _ = hnsw_insert_batch(self.hnsw_cfg, self.state,
+                                          sig.bitmaps, sig.pcs, levels,
+                                          jnp.asarray(keep))
         return self.state.count     # timing handle (no sync implied)
 
     # -- lifecycle hooks (exact-verify signature store tracks capacity) ------
@@ -235,7 +275,8 @@ class RawHNSWBackend(_HNSWLifecycle):
         self.hnsw_cfg = HNSWConfig(
             capacity=cfg.capacity, words=cfg.num_hashes, M=cfg.M, M0=cfg.M0,
             ef_construction=cfg.ef_construction, ef_search=cfg.ef_search,
-            max_level=cfg.max_level, metric=metric)
+            max_level=cfg.max_level, metric=metric,
+            query_chunk=cfg.query_chunk)
         self.state: HNSWState = hnsw_init(self.hnsw_cfg)
         self._batches = 0     # level-seed basis: monotone, sync-free
 
@@ -271,9 +312,11 @@ class RawHNSWBackend(_HNSWLifecycle):
         levels = jnp.asarray(sample_levels(
             B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
         self._batches += 1
+        self._guard_capacity(keep)
         pcs = jnp.zeros(B, jnp.int32)          # unused by raw metrics
-        self.state = hnsw_insert_batch(self.hnsw_cfg, self.state, sig.sigs,
-                                       pcs, levels, jnp.asarray(keep))
+        self.state, _ = hnsw_insert_batch(self.hnsw_cfg, self.state,
+                                          sig.sigs, pcs, levels,
+                                          jnp.asarray(keep))
         return self.state.count     # timing handle (no sync implied)
 
     def stats_schema(self) -> tuple[str, ...]:
@@ -293,5 +336,8 @@ def _make_hnsw(cfg: FoldConfig | None = None, **opts) -> HNSWBitmapBackend:
 
 @register("hnsw_raw")
 def _make_hnsw_raw(cfg: FoldConfig | None = None,
-                   metric: str = "minhash_jaccard") -> RawHNSWBackend:
+                   metric: str = "minhash_jaccard",
+                   **opts) -> RawHNSWBackend:
+    if opts:    # FoldConfig overrides (e.g. query_chunk), like "hnsw"
+        cfg = dataclasses.replace(cfg or FoldConfig(), **opts)
     return RawHNSWBackend(cfg or FoldConfig(), metric=metric)

@@ -11,10 +11,13 @@
 
   FlatLSHBackend ("flat_lsh") Milvus MINHASH_LSH analogue: incremental
       buckets (Milvus maintains its index), but candidate retrieval is
-      *budgeted*: at most `topk` candidates are verified per query (the
-      paper's Table 1 trades recall for throughput via this knob).
+      *budgeted*: at most `topk` DISTINCT candidates are verified per query
+      (the paper's Table 1 trades recall for throughput via this knob).
       Candidates beyond the budget are silently dropped — exactly the
-      recall failure mode the paper describes.
+      recall failure mode the paper describes. (Duplicate bucket hits used
+      to count against the budget before dedup, silently under-running the
+      configured verification budget; candidates are now deduplicated while
+      collecting.)
 
 Band/row counts are calibrated to tau via the S-curve (H=112, tau=0.7 →
 14 bands × 8 rows, threshold ≈ 0.72). Verification is vectorized numpy over
@@ -82,6 +85,12 @@ class _BandedLSHBase:
     def insert(self, sig: SigBatch, keep) -> None:
         assert self._qkeys is not None, "insert() before search()"
         new_idx = np.flatnonzero(np.asarray(keep))
+        if self.n + len(new_idx) > self.capacity:
+            raise RuntimeError(
+                f"{self.name} store full: {self.n} of {self.capacity} rows "
+                f"used and the batch admits {len(new_idx)} more; call "
+                f"grow() (or run under the service's IndexManager growth "
+                f"watermark) — refusing to silently drop admitted docs")
         rows = np.arange(self.n, self.n + len(new_idx))
         self.store[rows] = np.asarray(sig.sigs)[new_idx]
         self.keys[rows] = self._qkeys[new_idx]
@@ -194,16 +203,23 @@ class FlatLSHBackend(_BandedLSHBase):
         ids = np.full((B, 1), -1, np.int32)
         sims = np.full((B, 1), -np.inf, np.float32)
         for i in range(B):
+            # dedup WHILE collecting: a doc matching in several bands used
+            # to occupy several budget slots, silently shrinking the
+            # effective verification budget below the configured topk
             cand: list[int] = []
+            seen: set[int] = set()
             for k in qkeys[i]:
-                bucket = self.buckets.get(int(k))
-                if bucket:
-                    cand.extend(bucket)
-                    if len(cand) >= self.topk:    # the topK budget
-                        break
+                for r in self.buckets.get(int(k), ()):
+                    if r not in seen:
+                        seen.add(r)
+                        cand.append(r)
+                        if len(cand) >= self.topk:    # the topK budget
+                            break
+                if len(cand) >= self.topk:
+                    break
             if not cand:
                 continue
-            cand = np.unique(np.asarray(cand[: self.topk], dtype=np.int64))
+            cand = np.asarray(cand, dtype=np.int64)
             ids[i, 0], sims[i, 0] = self._best(self.store[cand], cand,
                                                sigs_np[i])
         return ids, sims

@@ -12,6 +12,11 @@ merge and surface as -1/-inf.
 
 No growth or snapshot path yet: `grow`/`save`/`restore` refuse loudly, and
 the serving layer runs this backend without an IndexManager.
+
+Search memory: the per-shard batched HNSW search inherits the memory-lean
+defaults from core/hnsw.py — packed visited bitsets and capacity-derived
+query chunking — via `FoldConfig.query_chunk` (cfg.hnsw() carries it into
+the fused step's hnsw_search calls).
 """
 from __future__ import annotations
 

@@ -114,8 +114,8 @@ class DedupPipeline:
 
     def stats_schema(self) -> tuple[str, ...]:
         return (("t_signature", "t_in_batch", "t_search", "t_insert",
-                 "n_batch_drop", "n_index_drop", "n_insert", "count")
-                + tuple(self.backend.stats_schema()))
+                 "n_batch_drop", "n_index_drop", "n_insert", "n_overflow",
+                 "count") + tuple(self.backend.stats_schema()))
 
     # -- step ① -------------------------------------------------------------
     def signatures(self, tokens, lengths) -> SigBatch:
@@ -241,6 +241,10 @@ class DedupPipeline:
         Blocking composition of the two stage functions; per-stage timing
         and admit/drop accounting preserved for the Fig. 7 breakdown."""
         stats: dict[str, Any] = {}
+        # pre-batch occupancy (host sync — process_batch is the blocking
+        # path): lets the overflow check below compare claimed admissions
+        # against rows the backend actually landed
+        count0 = self.backend.inserted
 
         t0 = time.perf_counter()
         sig = self.signatures(tokens, lengths)
@@ -258,4 +262,10 @@ class DedupPipeline:
         stats["n_index_drop"] = int((keep_in_batch & ~keep).sum())
         stats["n_insert"] = int(keep.sum())
         stats["count"] = self.backend.inserted
+        # rows whose verdict claims admission but which the backend did not
+        # land (fixed-capacity overflow). Every built-in backend refuses the
+        # batch instead (so this stays 0); the stat catches third-party
+        # backends that silently drop.
+        stats["n_overflow"] = max(
+            0, stats["n_insert"] - (stats["count"] - count0))
         return keep, stats

@@ -106,7 +106,18 @@ class DedupBackend(Protocol):
       insert(sig, keep)              step-⑤: admit keep-masked docs; MAY
                                      return a device array for the pipeline
                                      to block on when timing the stage
-                                     (None for synchronous host inserts)
+                                     (None for synchronous host inserts).
+                                     OVERFLOW CONTRACT: a backend must never
+                                     silently drop a keep-row at capacity —
+                                     the caller's verdicts would claim
+                                     admission for a doc the index cannot
+                                     see. Either grow transparently, RAISE
+                                     (every fixed-store built-in refuses the
+                                     batch with a grow() hint), or at
+                                     minimum surface the shortfall so
+                                     DedupPipeline.process_batch's
+                                     n_overflow stat (claimed admissions
+                                     minus realized count delta) is nonzero.
       grow(new_capacity) -> None     geometric re-alloc (service watermark)
       save(dir, step, async_write=False) -> None
       restore(dir, step=None) -> int

@@ -44,7 +44,10 @@ __all__ = ["ServiceConfig", "DedupService", "DocVerdict", "Ticket"]
 class ServiceConfig:
     fold: FoldConfig = dataclasses.field(default_factory=FoldConfig)
     # index organization: any repro.index registry key + factory options
-    # (e.g. backend="flat_lsh", backend_opts={"topk": 160})
+    # (e.g. backend="flat_lsh", backend_opts={"topk": 160}). FoldConfig
+    # fields can be overridden per-service the same way — e.g.
+    # backend_opts={"query_chunk": 256} bounds the batched-search visited
+    # working set (fold.query_chunk=None derives a default from capacity).
     backend: str = "hnsw"
     backend_opts: dict = dataclasses.field(default_factory=dict)
     # micro-batching

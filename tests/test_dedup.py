@@ -157,9 +157,9 @@ def test_select_heuristic_improves_dense_recall():
                          ef_construction=32, ef_search=32, max_level=3,
                          select_heuristic=heur)
         st = hnsw_init(cfg)
-        st = hnsw_insert_batch(cfg, st, bm, pcs,
-                               jnp.asarray(sample_levels(N, cfg)),
-                               jnp.ones(N, bool))
+        st, _ = hnsw_insert_batch(cfg, st, bm, pcs,
+                                  jnp.asarray(sample_levels(N, cfg)),
+                                  jnp.ones(N, bool))
         ids, _ = hnsw_search(cfg, st, bm, k=4)
         got = np.asarray(ids)
         recalls[heur] = np.mean([len(set(gt[i]) & set(got[i])) / 4

@@ -35,8 +35,8 @@ def _build(sigs, metric="bitmap_jaccard", **kw):
                      metric=metric, **kw)
     state = hnsw_init(cfg)
     levels = jnp.asarray(sample_levels(len(sigs), cfg))
-    state = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
-                              jnp.ones(len(sigs), bool))
+    state, _ = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
+                                 jnp.ones(len(sigs), bool))
     return cfg, state, vecs
 
 
@@ -87,11 +87,15 @@ def test_masked_insert_skips():
     mask = np.zeros(100, bool)
     mask[::2] = True
     levels = jnp.asarray(sample_levels(100, cfg))
-    state = hnsw_insert_batch(cfg, state, vecs, pcs, levels, jnp.asarray(mask))
-    assert int(state.count) == 50
+    state, n_ins = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
+                                     jnp.asarray(mask))
+    assert int(state.count) == 50 == int(n_ins)
 
 
 def test_capacity_guard():
+    """The raw primitive stops at capacity but REPORTS the shortfall: the
+    returned n_inserted is the caller's overflow signal (the repro.index
+    backends turn it into a loud refusal)."""
     sigs = _corpus(40)
     vecs = pack_bitmaps(jnp.asarray(sigs), T=1024)
     pcs = popcount(vecs)
@@ -99,9 +103,10 @@ def test_capacity_guard():
                      ef_search=8, max_level=2)
     state = hnsw_init(cfg)
     levels = jnp.asarray(sample_levels(40, cfg))
-    state = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
-                              jnp.ones(40, bool))
-    assert int(state.count) == 16    # silently stops at capacity
+    state, n_ins = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
+                                     jnp.ones(40, bool))
+    assert int(state.count) == 16    # stops at capacity...
+    assert int(n_ins) == 16          # ...and the caller can see 24 dropped
 
 
 def test_empty_index_search():
@@ -112,6 +117,69 @@ def test_empty_index_search():
     ids, sims = hnsw_search(cfg, state, q, k=4)
     assert (np.asarray(ids) == -1).all()
     assert np.isneginf(np.asarray(sims)).all()
+
+
+@pytest.mark.parametrize("metric", ["bitmap_jaccard", "minhash_jaccard"])
+def test_packed_visited_bitset_equivalence(metric):
+    """The packed uint32 visited bitset is a pure representation change:
+    construction produces the identical graph and search returns
+    bit-identical (ids, sims) vs the historical bool mask, per metric."""
+    sigs = _corpus(300, dup_rate=0.35)
+    cfg, state, vecs = _build(sigs, metric)          # packed (default)
+    assert cfg.packed_visited
+    cfgb = cfg._replace(packed_visited=False)
+    _, stateb, _ = _build(sigs, metric, packed_visited=False)
+    for a, b in zip(state, stateb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ids_p, sims_p = hnsw_search(cfg, state, vecs, k=4)
+    ids_b, sims_b = hnsw_search(cfgb, state, vecs, k=4)
+    np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_b))
+    np.testing.assert_array_equal(np.asarray(sims_p), np.asarray(sims_b))
+
+
+def test_query_chunk_equivalence():
+    """Chunked execution (now the default) never changes results: explicit
+    chunk sizes, the auto default, and the unchunked path all agree."""
+    sigs = _corpus(300)
+    cfg, state, vecs = _build(sigs)
+    ids0, sims0 = hnsw_search(cfg, state, vecs, k=4, query_chunk=0)
+    for chunk in (None, 64, 100, 256):    # None = capacity-derived default
+        ids, sims = hnsw_search(cfg, state, vecs, k=4, query_chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids0))
+        np.testing.assert_array_equal(np.asarray(sims), np.asarray(sims0))
+
+
+def test_ef_smaller_than_k_still_returns_k_columns():
+    """Regression: ef < k used to return fewer than k columns, breaking
+    downstream (B, k) shape assumptions; ef is clamped to max(ef, k)."""
+    sigs = _corpus(120)
+    cfg, state, vecs = _build(sigs)
+    ids, sims = hnsw_search(cfg, state, vecs[:16], k=8, ef=2)
+    assert ids.shape == (16, 8) and sims.shape == (16, 8)
+    ids_ref, sims_ref = hnsw_search(cfg, state, vecs[:16], k=8, ef=8)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_ref))
+    np.testing.assert_array_equal(np.asarray(sims), np.asarray(sims_ref))
+
+
+def test_insert_batch_reports_inserted_count():
+    """n_inserted tracks the mask when there is room and stops counting at
+    capacity — the overflow signal the index backends refuse on."""
+    sigs = _corpus(60)
+    vecs = pack_bitmaps(jnp.asarray(sigs), T=1024)
+    pcs = popcount(vecs)
+    cfg = HNSWConfig(capacity=40, words=32, M=4, M0=8, ef_construction=8,
+                     ef_search=8, max_level=2)
+    state = hnsw_init(cfg)
+    levels = jnp.asarray(sample_levels(60, cfg))
+    mask = np.ones(60, bool)
+    mask[1::3] = False                          # 40 True rows: exactly fits
+    state, n = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
+                                 jnp.asarray(mask))
+    assert int(n) == int(mask.sum()) == int(state.count) == 40
+    # a second batch has no room at all
+    state, n2 = hnsw_insert_batch(cfg, state, vecs, pcs, levels,
+                                  jnp.ones(60, bool))
+    assert int(n2) == 0 and int(state.count) == 40
 
 
 def test_adjacency_invariants():

@@ -162,7 +162,10 @@ class _RefDPK:
 
 
 class _RefFlat:
-    """Numpy port of the pre-refactor FlatLSHPipeline (topK budget)."""
+    """Numpy port of the pre-refactor FlatLSHPipeline (topK budget), with
+    the PR-4 budget fix folded in: candidates are deduplicated WHILE
+    collecting, so the topk budget buys topk distinct verifications (a doc
+    matching in several bands used to burn several budget slots)."""
 
     def __init__(self, topk=4):
         self.sig_stage = SignatureStage(H, 5, 0)
@@ -178,16 +181,19 @@ class _RefFlat:
         qkeys = band_keys(sigs, self.bands, self.rows)
         dup = np.zeros(len(sigs), bool)
         for i in range(len(sigs)):
-            cand = []
+            cand, seen = [], set()
             for k in qkeys[i]:
-                bucket = self.buckets.get(int(k))
-                if bucket:
-                    cand.extend(bucket)
-                    if len(cand) >= self.topk:
-                        break
+                for r in self.buckets.get(int(k), ()):
+                    if r not in seen:
+                        seen.add(r)
+                        cand.append(r)
+                        if len(cand) >= self.topk:
+                            break
+                if len(cand) >= self.topk:
+                    break
             if not cand:
                 continue
-            cand = np.unique(np.asarray(cand[: self.topk], np.int64))
+            cand = np.asarray(cand, np.int64)
             sims = (self.store[cand] == sigs[i][None, :]).mean(axis=1)
             dup[i] = bool((sims >= TAU).any())
         keep = keep_in & ~dup
@@ -379,6 +385,84 @@ def test_direct_grow_preserves_verdicts():
         assert pipe.capacity == 1024
         k2, _ = pipe.process_batch(*batches[0])    # replay: all dups
         assert k1.sum() > 0 and np.asarray(k2).sum() == 0, key
+
+
+# ------------------------------------------------- capacity overflow sweep
+@pytest.mark.parametrize("key,opts", [
+    ("hnsw", {}), ("hnsw_raw", {}), ("dpk", {}), ("flat_lsh", {}),
+])
+def test_overflow_refused_not_silently_dropped(key, opts):
+    """AC: no backend may return verdicts claiming admission for rows it
+    dropped at capacity. Fixed-store backends refuse the batch loudly; after
+    an explicit grow() the same batch succeeds and every claimed admission
+    is really in the index."""
+    batches = _stream(2, 64, dataset="lm1b")     # ~2% dups: fills fast
+    cfg = FoldConfig(capacity=48, M=8, M0=16, ef_construction=16,
+                     ef_search=16, tau=TAU, threshold_space="minhash")
+    pipe = make_pipeline(key, cfg=cfg, **opts)
+    with pytest.raises(RuntimeError, match="grow|full"):
+        for t, l in batches:
+            pipe.process_batch(t, l)
+    # the refusal left claimed == realized (nothing silently dropped)
+    assert pipe.inserted <= pipe.capacity
+    pre = pipe.inserted
+    pipe.grow(1 << 12)
+    keeps = [np.asarray(pipe.process_batch(t, l)[0]) for t, l in batches]
+    total = int(np.concatenate(keeps).sum())
+    # the grown index landed every claimed admission, on top of whatever
+    # the refused run had already inserted before raising
+    assert pipe.inserted == pre + total
+
+
+def test_pipeline_n_overflow_stat_flags_silent_drops():
+    """DedupPipeline.process_batch surfaces n_overflow (claimed admissions
+    minus realized count delta) for third-party backends that neither grow
+    nor raise."""
+    from repro.index.backends.brute import BruteForceBackend
+
+    class LeakyBrute(BruteForceBackend):
+        def insert(self, sig, keep):     # silently truncate at capacity
+            new = np.asarray(sig.sigs)[np.asarray(keep)]
+            room = max(self.capacity - self.n, 0)
+            self.store[self.n:self.n + min(len(new), room)] = new[:room]
+            self.n += min(len(new), room)
+
+    pipe = DedupPipeline(LeakyBrute(FoldConfig(capacity=24, tau=TAU)))
+    (t, l), = _stream(1, 64, dataset="lm1b")
+    keep, stats = pipe.process_batch(t, l)
+    assert stats["n_insert"] == int(np.asarray(keep).sum()) > 24
+    assert stats["n_overflow"] == stats["n_insert"] - 24 > 0
+    assert "n_overflow" in pipe.stats_schema()
+
+
+def test_flat_lsh_budget_counts_distinct_candidates():
+    """Regression: a stored doc matching the query in several bands used to
+    burn several topk budget slots, so a true duplicate sitting one bucket
+    later was never verified."""
+    from repro.index.backends.lsh import FlatLSHBackend
+    from repro.index.protocol import SigBatch
+
+    cfg = FoldConfig(capacity=256, tau=TAU)
+    be = FlatLSHBackend(cfg, topk=2)
+    rows = be.rows                       # lanes per band
+    rng = np.random.default_rng(5)
+    q = rng.integers(0, 2**32, H, dtype=np.uint32)
+    # Y collides with q in bands 0 and 1 only (16/112 lanes: not a dup)
+    y = rng.integers(0, 2**32, H, dtype=np.uint32)
+    y[:2 * rows] = q[:2 * rows]
+    # X is a true duplicate (90/112 lanes ≈ 0.80 ≥ tau) whose only band
+    # collision with q is band 5 — visited AFTER Y's two bucket hits
+    x = q.copy()
+    diff = [b * rows for b in range(5)]                 # break bands 0-4
+    diff += list(range(6 * rows, 8 * rows)) + [8 * rows]   # 17 more lanes
+    x[diff] = ~q[diff]
+    assert len(diff) == 22
+    sig = SigBatch(sigs=np.stack([y, x]))
+    be.search(sig)
+    be.insert(sig, np.array([True, True]))
+    ids, sims = be.search(SigBatch(sigs=q[None]))
+    # old budget semantics verified Y twice and missed X entirely
+    assert ids[0, 0] == 1 and sims[0, 0] >= TAU
 
 
 # ------------------------------------------------- snapshots & round-trips

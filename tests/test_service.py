@@ -99,9 +99,9 @@ def test_hnsw_grow_preserves_search():
     cfg = HNSWConfig(capacity=512, words=128, M=8, M0=16,
                      ef_construction=32, ef_search=32, max_level=3)
     st = hnsw_init(cfg)
-    st = hnsw_insert_batch(cfg, st, bm, pcs,
-                           jnp.asarray(sample_levels(300, cfg)),
-                           jnp.ones(300, bool))
+    st, _ = hnsw_insert_batch(cfg, st, bm, pcs,
+                              jnp.asarray(sample_levels(300, cfg)),
+                              jnp.ones(300, bool))
     ids0, sims0 = hnsw_search(cfg, st, bm[:64], k=4)
     cfg2, st2 = hnsw_grow(cfg, st, 2048)
     assert cfg2.capacity == 2048 and int(st2.count) == int(st.count)
@@ -111,9 +111,9 @@ def test_hnsw_grow_preserves_search():
     # and the grown index keeps accepting inserts past the old capacity
     more = pack_bitmaps(jnp.asarray(
         rng.integers(0, 2**32, (300, 112), dtype=np.uint32)), T=4096)
-    st2 = hnsw_insert_batch(cfg2, st2, more, popcount(more),
-                            jnp.asarray(sample_levels(300, cfg2, seed=1)),
-                            jnp.ones(300, bool))
+    st2, _ = hnsw_insert_batch(cfg2, st2, more, popcount(more),
+                               jnp.asarray(sample_levels(300, cfg2, seed=1)),
+                               jnp.ones(300, bool))
     assert int(st2.count) == 600 > cfg.capacity
 
 
