@@ -19,7 +19,8 @@ import sys
 
 SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
             "fig9_largescale", "table3_collisions", "appendix_hamming",
-            "dist_scaling", "service_throughput", "search_mem", "roofline"]
+            "dist_scaling", "service_throughput", "search_mem", "insert_bench",
+            "roofline"]
 
 
 def run_backend(name: str, quick: bool = False,

@@ -72,6 +72,17 @@ class FoldConfig:
     # Reaches every HNSW-organized backend (hnsw, hnsw_raw, hnsw_sharded)
     # and the service via ServiceConfig.backend_opts={"query_chunk": N}.
     query_chunk: int | None = None
+    # insertion organization (hnsw/hnsw_raw/hnsw_sharded): True = two-phase
+    # batched commit (one chunked candidate-discovery program for the whole
+    # batch + a compact order-dependent commit scan); False = the historical
+    # per-doc traversal loop. See HNSWConfig.batched_insert.
+    batched_insert: bool = True
+    # seed batched-insert candidate discovery from the admission loop's own
+    # step-③ search results (StepResult.ids) instead of re-descending the
+    # graph for documents it just searched. Only consulted when
+    # batched_insert is on; changes which (equivalent-recall) graph is
+    # built, never which documents are admitted in a given batch.
+    reuse_search: bool = True
     # ablation arms (Fig. 8)
     use_kernel: bool = True              # 'SIMD' arm -> Pallas kernel path
     cached: bool = True                  # popcount-cache arm
@@ -85,7 +96,8 @@ class FoldConfig:
                           ef_search=self.ef_search, max_level=self.max_level,
                           metric="bitmap_jaccard",
                           select_heuristic=self.select_heuristic,
-                          query_chunk=self.query_chunk)
+                          query_chunk=self.query_chunk,
+                          batched_insert=self.batched_insert)
 
 
 def bitmap_tau(cfg: FoldConfig) -> float:

@@ -31,6 +31,17 @@ Memory/throughput shape of the beam loop (this file's hot path):
     `query_chunk` from the capacity when the knob is unset, bounding the
     live visited state at (chunk, (cap+31)//32) words regardless of Q.
 
+Insertion (the ingest half of the paper's online loop) is a TWO-PHASE
+BATCHED COMMIT by default: phase A discovers every kept row's per-level
+candidates in one chunked vmapped beam-search program against the
+pre-batch graph (optionally seeded from the admission step's own search
+results — `seed_ids`), and phase B commits the strictly order-dependent
+surgery (slot writes, adjacency rows, back-links, entry/top) in a compact
+branch-free lax.scan, with intra-batch links supplied by merging the
+batch's earlier rows into each candidate set. `HNSWConfig.batched_insert=
+False` keeps the historical per-doc traversal loop; a single-row batch is
+bit-identical between the two organizations.
+
 The per-hop hot loop — distances from the query to the gathered neighbor
 rows — is exactly the bitmap-Jaccard XOR+popcount computation that
 kernels/bitmap_jaccard.py tiles for the VPU. Inside the (vmapped) search we
@@ -93,6 +104,14 @@ class HNSWConfig(NamedTuple):
     # default query chunking for batched search: None = derive from capacity
     # (bound the visited working set), 0 = never chunk, N = chunk at N.
     query_chunk: int | None = None
+    # insertion organization: True (default) = two-phase batched commit —
+    # phase A discovers every kept row's per-level candidates in ONE chunked
+    # vmapped beam-search program against the pre-batch graph (optionally
+    # seeded from the admission step's search results), phase B commits the
+    # cheap order-dependent graph surgery in a compact lax.scan. False = the
+    # historical per-doc fori_loop (one full top-down traversal per row),
+    # kept for the equivalence tests and as the conservative fallback.
+    batched_insert: bool = True
 
     @property
     def ml(self) -> float:
@@ -342,6 +361,31 @@ def _descend(cfg, state, q, qpc, stop_level: jnp.ndarray):
     return cur, curd
 
 
+# ---------------------------------------------------------- chunked mapping
+def _chunked_map(fn, operands, chunk: int, pad_values=None):
+    """Run a batched `fn` over `operands` in chunks along the leading axis.
+
+    The memory-bounding idiom shared by batched search, phase-A candidate
+    discovery, and the intra-batch distance matrix: pad to a multiple of
+    `chunk`, `lax.map` the function over (n, chunk, ...) slabs, slice the
+    padding back off every output. `chunk` falsy or B <= chunk runs `fn`
+    directly — chunking never changes results, only the live working set."""
+    B = operands[0].shape[0]
+    if not chunk or B <= chunk:
+        return fn(*operands)
+    pad = (-B) % chunk
+    n = (B + pad) // chunk
+    if pad_values is None:
+        pad_values = (0,) * len(operands)
+    slabs = tuple(
+        jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1), constant_values=v)
+        .reshape((n, chunk) + x.shape[1:])
+        for x, v in zip(operands, pad_values))
+    out = jax.lax.map(lambda xs: fn(*xs), slabs)
+    return jax.tree.map(
+        lambda y: y.reshape((B + pad,) + y.shape[2:])[:B], out)
+
+
 # ------------------------------------------------------------------- search
 @functools.partial(jax.jit, static_argnames=("cfg", "k", "ef", "query_chunk"))
 def hnsw_search(cfg: HNSWConfig, state: HNSWState, queries: jnp.ndarray,
@@ -381,18 +425,7 @@ def hnsw_search(cfg: HNSWConfig, state: HNSWState, queries: jnp.ndarray,
         sims = jnp.where(ids >= 0, 1.0 - d, -jnp.inf)
         return ids, sims
 
-    Q = queries.shape[0]
-    if query_chunk and Q > query_chunk:
-        pad = (-Q) % query_chunk
-        qp = jnp.pad(queries, ((0, pad), (0, 0)))
-        pp = jnp.pad(qpcs, (0, pad))
-        n = (Q + pad) // query_chunk
-        qs = qp.reshape(n, query_chunk, -1)
-        ps = pp.reshape(n, query_chunk)
-        ids, sims = jax.lax.map(lambda ab: jax.vmap(one)(ab[0], ab[1]),
-                                (qs, ps))
-        return ids.reshape(-1, k)[:Q], sims.reshape(-1, k)[:Q]
-    return jax.vmap(one)(queries, qpcs)
+    return _chunked_map(jax.vmap(one), (queries, qpcs), query_chunk)
 
 
 # ------------------------------------------------------------------- insert
@@ -445,23 +478,53 @@ def _prune_row(cfg, state, node, level: int, cand_ids, cand_d, m_l: int):
 
 
 def _link_back(cfg, state, new_id, level: int, sel_ids, m_l: int):
-    """Add new_id into each selected neighbor's row, pruning to m_l closest."""
-    def one(st, nb):
-        def do(st):
-            row = st.neighbors[level, nb]                    # (M0,)
-            nbv = st.vectors[nb]
-            nbpc = st.pb[nb]
-            cand_ids = jnp.concatenate([row, new_id[None]])
-            d = _dist_ids(cfg, st, nbv, nbpc, cand_ids)
-            neg, idxs = jax.lax.top_k(-d, cfg.M0)
-            keep = cand_ids[idxs]
-            keep = jnp.where((jnp.arange(cfg.M0) < m_l) & jnp.isfinite(-neg),
-                             keep, -1)
-            return st._replace(neighbors=st.neighbors.at[level, nb].set(keep))
-        return jax.lax.cond(nb >= 0, do, lambda s: s, st), None
+    """Add new_id into each selected neighbor's row, pruning to m_l.
 
-    state, _ = jax.lax.scan(one, state, sel_ids)
-    return state
+    Mirrors hnswlib's mutuallyConnectNewElement: while the neighbor's row
+    has room the new id is simply merged in (plain top-k keeps every finite
+    candidate), but once the row would overflow AND cfg.select_heuristic is
+    on, the row is re-selected with the same diversity heuristic the forward
+    rows use (_select_diverse). Back-links used to always prune by plain
+    top-k, silently ignoring the heuristic — which re-densified exactly the
+    duplicate clusters the heuristic exists to keep navigable.
+
+    The per-neighbor updates are independent — sel_ids are distinct and
+    each update reads only its own adjacency row (plus immutable vectors) —
+    so all rows are recomputed vectorized and committed in one scatter
+    instead of the historical per-neighbor lax.scan."""
+    S = sel_ids.shape[0]
+    safe = jnp.maximum(sel_ids, 0)
+    rows = state.neighbors[level, safe]                      # (S, M0)
+    nbv = state.vectors[safe]
+    nbpc = state.pb[safe]
+    cand_ids = jnp.concatenate(
+        [rows, jnp.broadcast_to(new_id, (S,))[:, None]], axis=1)  # (S, M0+1)
+    d = jax.vmap(lambda v, p, c: _dist_ids(cfg, state, v, p, c))(
+        nbv, nbpc, cand_ids)
+
+    neg, idxs = jax.lax.top_k(-d, cfg.M0)                    # (S, M0)
+    keep = jnp.take_along_axis(cand_ids, idxs, axis=1)
+    new_rows = jnp.where(
+        (jnp.arange(cfg.M0)[None, :] < m_l) & jnp.isfinite(-neg), keep, -1)
+
+    if cfg.select_heuristic:
+        def heur_one(c_ids, c_d):
+            order = jnp.argsort(c_d)         # _select_diverse wants the
+            ci, cd = c_ids[order], c_d[order]    # candidates sorted by d
+            div = _select_diverse(cfg, state, ci, cd, m_l)
+            div_d = jnp.where(div >= 0, cd, jnp.inf)
+            hneg, hidx = jax.lax.top_k(-div_d, cfg.M0)
+            return jnp.where(jnp.isfinite(-hneg), div[hidx], -1)
+
+        heur_rows = jax.vmap(heur_one)(cand_ids, d)
+        overfull = jnp.sum((cand_ids >= 0).astype(jnp.int32), axis=1) > m_l
+        new_rows = jnp.where(overfull[:, None], heur_rows, new_rows)
+
+    valid = sel_ids >= 0
+    idx = jnp.where(valid, sel_ids, cfg.capacity)            # OOB -> dropped
+    return state._replace(
+        neighbors=state.neighbors.at[level, idx].set(
+            jnp.where(valid[:, None], new_rows, rows), mode="drop"))
 
 
 def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
@@ -490,8 +553,9 @@ def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
                 cand_ids, cand_d, _ = _search_layer(
                     cfg, st, vec, pc, lev, cfg.ef_construction,
                     s_ids, s_d, visited)
-                sel = jnp.where(jnp.arange(cfg.ef_construction) < m_l,
-                                cand_ids, -1)
+                # the beam is distance-sorted with -1 in empty slots, so the
+                # first m_l entries ARE the selected back-link neighbors
+                sel = cand_ids[:m_l]
                 st = _prune_row(cfg, st, idx, lev, cand_ids, cand_d, m_l)
                 st = _link_back(cfg, st, idx, lev, sel, m_l)
                 # seed the next level down with the best candidate found here
@@ -509,14 +573,197 @@ def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
     return jax.lax.cond(state.entry < 0, first, connect, state)
 
 
+# ----------------------------------------------- two-phase batched insert
+def _pairwise_dists(cfg: HNSWConfig, vecs, pcs, chunk: int) -> jnp.ndarray:
+    """(B, B) distance matrix among the batch rows, chunked on the query
+    dim so the fused XOR+popcount temp stays bounded for large ingests."""
+    def row(q, qpc):
+        return _dist_rows(cfg, q, qpc, vecs, pcs)
+
+    return _chunked_map(jax.vmap(row), (vecs, pcs), chunk)
+
+
+def _discover_candidates(cfg: HNSWConfig, state: HNSWState, vecs, pcs,
+                         levels, seed_ids, chunk: int):
+    """Phase A: per-row, per-level candidate discovery vs the PRE-BATCH
+    graph — one chunked vmapped program (the memory-lean search machinery)
+    instead of B sequential top-down traversals.
+
+    seed_ids: optional (B, S) int32 — the admission step's search results
+    for these exact rows (step ③ just walked the graph for them); they seed
+    the level-0 beam so construction starts from the query's neighborhood
+    instead of re-finding it from the entry point. S must be < ef_construction.
+    Returns (cand_ids, cand_d): (B, L+1, E) sorted ascending per level;
+    inactive levels / empty graph come back -1 / +inf.
+    """
+    E = cfg.ef_construction
+    L1 = cfg.max_level + 1
+
+    def one(q, qpc, level, seeds):
+        cur, curd = _descend(cfg, state, q, qpc, level)
+        top = state.top_level
+        s_ids, s_d = cur[None], curd[None]
+        out_ids = jnp.full((L1, E), -1, jnp.int32)
+        out_d = jnp.full((L1, E), jnp.inf, jnp.float32)
+        # NOTE: no lax.cond around the per-level search. Under vmap a cond
+        # runs both branches anyway, and its batched lowering of the inner
+        # while_loop is an order of magnitude slower than running the search
+        # unconditionally — so every level's search executes (inactive
+        # levels exhaust their tiny beams immediately) and only the CARRY
+        # and the outputs are masked, which preserves the sequential
+        # semantics exactly: the topmost active level still starts from the
+        # descend result, lower active levels from the level above's best.
+        for lev in range(cfg.max_level, -1, -1):   # static unroll
+            init_ids, init_d = s_ids, s_d
+            if lev == 0 and seeds is not None:
+                # merge the step-③ seeds into the initial beam; the
+                # _search_layer seed contract wants distinct ids, so
+                # repeats (seed == descend result) are masked out
+                sd = _dist_ids(cfg, state, q, qpc, seeds)
+                cat = jnp.concatenate([s_ids, seeds])
+                catd = jnp.concatenate([s_d, sd])
+                order = jnp.argsort(cat)
+                so, sod = cat[order], catd[order]
+                dup = jnp.concatenate(
+                    [jnp.zeros((1,), bool), so[1:] == so[:-1]])
+                init_ids = jnp.where(dup, -1, so)
+                init_d = jnp.where(dup, jnp.inf, sod)
+            visited = _visited_new(cfg)
+            c_ids, c_d, _ = _search_layer(cfg, state, q, qpc, lev, E,
+                                          init_ids, init_d, visited)
+            active = lev <= jnp.minimum(level, top)
+            # seed the next level down with the best candidate found here
+            s_ids = jnp.where(active, c_ids[:1], s_ids)
+            s_d = jnp.where(active, c_d[:1], s_d)
+            out_ids = out_ids.at[lev].set(jnp.where(active, c_ids, -1))
+            out_d = out_d.at[lev].set(jnp.where(active, c_d, jnp.inf))
+        # an unreachable / empty-graph "candidate" surfaces as +inf distance
+        # (e.g. the entry placeholder when entry < 0): it is no candidate
+        out_ids = jnp.where(jnp.isfinite(out_d), out_ids, -1)
+        return out_ids, jnp.where(out_ids >= 0, out_d, jnp.inf)
+
+    if seed_ids is None:
+        return _chunked_map(jax.vmap(lambda a, b, c: one(a, b, c, None)),
+                            (vecs, pcs, levels), chunk)
+    return _chunked_map(jax.vmap(one), (vecs, pcs, levels, seed_ids), chunk,
+                        pad_values=(0, 0, 0, -1))
+
+
+def _merge_candidates(cfg: HNSWConfig, state: HNSWState, levels, admit,
+                      slots, cand_ids, cand_d, pair_d):
+    """Vectorized candidate merge + neighbor selection for the whole batch.
+
+    For every (row, level): merge the phase-A graph candidates with the
+    batch's own EARLIER admitted rows that exist at that level (intra-batch
+    links — at levels above the pre-batch top they are the only nodes, so
+    the merged set is complete there; slot ids >= the pre-batch count never
+    collide with graph candidate ids < it). From the merged distance-sorted
+    list derive the two order-independent products of an insert:
+
+      fwd (B, L+1, M0)  the new node's own adjacency row per level
+                        (exactly _prune_row's selection, heuristic included)
+      sel (B, L+1, M0)  the back-link targets (closest m_l, -1 padded)
+
+    Neither depends on the scan-time graph state — selection reads only
+    vectors (already slot-written) — so all of it runs as one vectorized
+    program, leaving only back-links and entry/top updates to the scan.
+    `state` must be the slot-written state (batch vectors visible)."""
+    B = slots.shape[0]
+    E = cand_ids.shape[-1]
+    jidx = jnp.arange(B, dtype=jnp.int32)
+    earlier = (jidx[None, :] < jidx[:, None]) & admit[None, :]   # (B, B)
+
+    fwd_levels, sel_levels = [], []
+    for lev in range(cfg.max_level + 1):
+        m_l = cfg.M0 if lev == 0 else cfg.M
+        bmask = earlier & (levels[None, :] >= lev)
+        b_ids = jnp.where(bmask, slots[None, :], -1)
+        b_d = jnp.where(bmask, pair_d, jnp.inf)
+        cat_ids = jnp.concatenate([cand_ids[:, lev], b_ids], axis=1)
+        cat_d = jnp.concatenate([cand_d[:, lev], b_d], axis=1)
+        neg, ix = jax.lax.top_k(-cat_d, E)                       # (B, E)
+        m_ids = jnp.where(jnp.isfinite(-neg),
+                          jnp.take_along_axis(cat_ids, ix, axis=1), -1)
+        m_d = -neg
+        if cfg.select_heuristic:
+            div = jax.vmap(
+                lambda ci, cd: _select_diverse(cfg, state, ci, cd, m_l))(
+                    m_ids, m_d)
+            div_d = jnp.where(div >= 0, m_d, jnp.inf)
+            hneg, hidx = jax.lax.top_k(-div_d, cfg.M0)
+            fwd = jnp.where(jnp.isfinite(-hneg),
+                            jnp.take_along_axis(div, hidx, axis=1), -1)
+        else:
+            fwd = jnp.where(
+                (jnp.arange(cfg.M0)[None, :] < m_l)
+                & jnp.isfinite(m_d[:, :cfg.M0]), m_ids[:, :cfg.M0], -1)
+        # distance-sorted with -1 in empty slots: the first m_l entries ARE
+        # the back-link targets (M0-padded so levels stack uniformly)
+        sel_levels.append(m_ids[:, :cfg.M0])
+        fwd_levels.append(fwd)
+    return (jnp.stack(fwd_levels, axis=1),    # (B, L+1, M0)
+            jnp.stack(sel_levels, axis=1))
+
+
+def _commit_batch(cfg: HNSWConfig, state: HNSWState, levels, admit, slots,
+                  fwd, sel) -> HNSWState:
+    """Phase B: the cheap, strictly order-dependent graph surgery as one
+    lax.scan — per admitted row: write the precomputed adjacency row,
+    back-link into the selected neighbors (_link_back), update entry/top.
+    No graph traversals and no candidate selection happen here.
+
+    The body is deliberately BRANCH-FREE: a lax.cond over the carried state
+    would make XLA materialize both branch outputs (copies of the dense
+    neighbor arrays, every step); instead every write is a masked
+    scatter-with-drop, so skipped rows / inactive levels are no-ops on the
+    same in-place buffers. The sequential "first node" case needs no
+    special branch either: a first row has no candidates (every write
+    masks out) and the shared entry/top rule — entry moves when
+    level > running top — covers it (running top starts at -1)."""
+    def body(st, xs):
+        slot, adm, level, f_row, s_row = xs
+        top = st.top_level               # frozen for this row's insert
+        for lev in range(cfg.max_level, -1, -1):   # static unroll
+            m_l = cfg.M0 if lev == 0 else cfg.M
+            active = adm & (lev <= jnp.minimum(level, top))
+            slot_w = jnp.where(active, slot, cfg.capacity)   # OOB -> no-op
+            st = st._replace(neighbors=st.neighbors
+                             .at[lev, slot_w].set(f_row[lev], mode="drop"))
+            st = _link_back(cfg, st, slot, lev,
+                            jnp.where(active, s_row[lev, :m_l], -1), m_l)
+        higher = adm & (level > top)
+        return st._replace(
+            entry=jnp.where(higher, slot, st.entry),
+            top_level=jnp.where(adm, jnp.maximum(top, level), top)), None
+
+    xs = (slots, admit, levels, fwd, sel)
+    state, _ = jax.lax.scan(body, state, xs)
+    return state
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
                       pcs: jnp.ndarray, levels: jnp.ndarray,
-                      mask: jnp.ndarray) -> tuple[HNSWState, jnp.ndarray]:
-    """Sequentially insert a batch (deterministic order). mask=False skips.
+                      mask: jnp.ndarray,
+                      seed_ids: jnp.ndarray | None = None
+                      ) -> tuple[HNSWState, jnp.ndarray]:
+    """Insert a batch in deterministic row order. mask=False skips.
 
     vecs: (B, W) uint32; pcs: (B,) int32; levels: (B,) int32 (pre-sampled);
     mask: (B,) bool — only True rows are inserted (duplicates stay out).
+    seed_ids: optional (B, S) int32, S < ef_construction — per-row graph
+    neighborhoods already known to the caller (the admission loop's step-③
+    search results); consumed by the batched path to seed candidate
+    discovery so the graph is not re-traversed from the top for rows the
+    pipeline just searched. The per-doc path ignores them.
+
+    Two organizations, selected by `cfg.batched_insert` (see HNSWConfig):
+    the default two-phase batched commit discovers candidates for ALL rows
+    in one chunked vmapped program against the pre-batch graph and then
+    scans over rows doing only slot/adjacency writes; the per-doc path runs
+    one full traversal per row inside a fori_loop. Both assign the same
+    slots to the same rows; a single-row batch is bit-identical between
+    them (phase A degenerates to the sequential search).
 
     Returns (state, n_inserted) where n_inserted is a () int32 device scalar
     counting the rows ACTUALLY inserted. When the index is full, masked rows
@@ -524,14 +771,48 @@ def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
     the `repro.index` backends refuse the batch rather than let a verdict
     claim admission for a dropped row (see DedupBackend.insert).
     """
-    def body(i, carry):
-        st, n = carry
+    if not cfg.batched_insert:
+        def body(i, carry):
+            st, n = carry
 
-        def do(c):
-            st, n = c
-            return _insert_one(cfg, st, vecs[i], pcs[i], levels[i]), n + 1
+            def do(c):
+                st, n = c
+                return _insert_one(cfg, st, vecs[i], pcs[i], levels[i]), n + 1
 
-        full = st.count >= cfg.capacity
-        return jax.lax.cond(mask[i] & ~full, do, lambda c: c, (st, n))
+            full = st.count >= cfg.capacity
+            return jax.lax.cond(mask[i] & ~full, do, lambda c: c, (st, n))
 
-    return jax.lax.fori_loop(0, vecs.shape[0], body, (state, jnp.int32(0)))
+        return jax.lax.fori_loop(0, vecs.shape[0], body,
+                                 (state, jnp.int32(0)))
+
+    # ---- batched two-phase commit
+    mask = mask.astype(jnp.bool_)
+    count0 = state.count
+    # slot assignment mirrors the sequential order exactly: kept rows fill
+    # consecutive slots; rows past capacity are skipped (overflow signal)
+    offs = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    slots = count0 + offs
+    admit = mask & (slots < cfg.capacity)
+    n_ins = jnp.sum(admit, dtype=jnp.int32)
+
+    chunk = (cfg.query_chunk if cfg.query_chunk is not None
+             else auto_query_chunk(cfg))
+    if seed_ids is not None:
+        seed_ids = jnp.asarray(seed_ids, jnp.int32)[:, :cfg.ef_construction - 1]
+    # phase A runs against the pre-batch graph (reads only graph-reachable
+    # rows, all < count0 — the bulk slot write below cannot alias it)
+    cand_ids, cand_d = _discover_candidates(cfg, state, vecs, pcs, levels,
+                                            seed_ids, chunk)
+    pair_d = _pairwise_dists(cfg, vecs, pcs, chunk)
+
+    levels = jnp.asarray(levels, jnp.int32)
+    safe = jnp.where(admit, slots, cfg.capacity)     # OOB rows are dropped
+    state = state._replace(
+        vectors=state.vectors.at[safe].set(vecs, mode="drop"),
+        pb=state.pb.at[safe].set(pcs, mode="drop"),
+        node_level=state.node_level.at[safe].set(levels, mode="drop"),
+        count=count0 + n_ins)
+    fwd, sel = _merge_candidates(cfg, state, levels, admit, slots,
+                                 cand_ids, cand_d, pair_d)
+    state = _commit_batch(cfg, state, levels, admit, slots, fwd, sel)
+    return state, n_ins

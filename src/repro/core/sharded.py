@@ -63,7 +63,8 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
                             k: int = 4, axis: str = "data",
                             query_chunk: int | None = None,
                             sub_batches: int = 1,
-                            masked: bool = False):
+                            masked: bool = False,
+                            reuse_search: bool = True):
     """Returns jit-able `step(states, bitmaps, pcs, levels) -> (states, keep)`.
 
     bitmaps (B, W) sharded over `axis` on the batch dim; states stacked
@@ -82,6 +83,11 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
     they are excluded from admission and their keep comes back False. The
     step then returns (states, keep, keep_in) so the serving layer can
     distinguish in-batch duplicates from index duplicates.
+
+    reuse_search=True seeds the local sub-graph's batched insert with the
+    ids the step-(3) local search just retrieved for the same queries —
+    the fused step never walks its shard twice for one document. Only
+    consulted when cfg.batched_insert is on.
     """
     nshards = mesh.shape[axis]
 
@@ -99,9 +105,13 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
         keep = keep_in & (best_global < tau)
         if va is not None:
             keep = keep & va
-        # (5) round-robin shard assignment for admitted docs
+        # (5) round-robin shard assignment for admitted docs; the local
+        # search above already holds each query's local neighborhood, so
+        # the batched insert is seeded with it instead of re-descending
         mine = (jnp.arange(B, dtype=jnp.int32) % nshards) == my
-        state, _ = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine)
+        seeds = ids if (reuse_search and cfg.batched_insert) else None
+        state, _ = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine,
+                                     seed_ids=seeds)
         return state, keep, keep_in
 
     def local(state, bitmaps, pcs, levels, valid=None):

@@ -66,7 +66,7 @@ class BruteForceBackend:
                 sims[better, 0] = best[better]
         return ids, sims
 
-    def insert(self, sig: SigBatch, keep) -> None:
+    def insert(self, sig: SigBatch, keep, search_ids=None) -> None:
         new = np.asarray(sig.sigs)[np.asarray(keep)]
         if self.n + len(new) > self.capacity:
             raise RuntimeError(
@@ -92,7 +92,9 @@ class BruteForceBackend:
     def restore(self, ckpt_dir: str, step: int | None = None) -> int:
         from repro.train import checkpoint as ckpt
         step = ckpt.latest_step(ckpt_dir) if step is None else step
-        assert step is not None, "no committed checkpoint found"
+        if step is None:     # a bare assert would vanish under python -O
+            raise FileNotFoundError(
+                f"no committed checkpoint found in {ckpt_dir!r}")
         meta = ckpt.manifest(ckpt_dir, step)
         cap = int(meta.get("capacity", self.capacity))
         target = max(cap, self.capacity)

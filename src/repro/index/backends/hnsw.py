@@ -53,11 +53,31 @@ class _HNSWLifecycle:
         raw primitive, but a protocol backend must never return a keep-mask
         whose verdicts claim admission for dropped rows. Standalone (non-
         IndexManager) use therefore fails loudly here; under the service the
-        growth watermark re-allocates ahead of this guard ever tripping."""
-        B = int(keep.shape[0])
+        growth watermark re-allocates ahead of this guard ever tripping.
+
+        The sync-free bound charges the KEPT-row count whenever the mask is
+        already host-resident (numpy), and only the full batch size B for a
+        device mask (reading it would force the very host sync the bound
+        exists to avoid). Charging B for host masks used to burn the last
+        ~B slots of headroom instantly, forcing a host sync on every batch
+        right where the growth watermark needs the pipeline to stay async.
+        After a sync the exact kept count is known, so only that is charged.
+
+        The serving pipeline passes DEVICE masks, so near capacity it still
+        pays the conservative B charge per batch; what keeps that path
+        sync-free in practice is the IndexManager growth watermark (its own
+        host-side dispatch accounting grows the index at ~85% occupancy,
+        long before this bound can shrink below one batch) plus grow()
+        re-deriving known/bound right after each re-allocation. The
+        host-mask fast path covers direct/host-side callers.
+        """
         cap = self.hnsw_cfg.capacity
-        if self._known_count + self._dispatched_bound + B <= cap:
-            self._dispatched_bound += B
+        if isinstance(keep, np.ndarray):
+            charge = int(keep.sum())           # host mask: exact, sync-free
+        else:
+            charge = int(keep.shape[0])        # device mask: conservative B
+        if self._known_count + self._dispatched_bound + charge <= cap:
+            self._dispatched_bound += charge
             return
         self._known_count = self.inserted          # host sync (rare)
         self._dispatched_bound = 0
@@ -68,7 +88,20 @@ class _HNSWLifecycle:
                 f"and the batch admits {n_keep} more; call grow() (or run "
                 f"under the service's IndexManager growth watermark) before "
                 f"inserting — refusing to silently drop admitted docs")
-        self._dispatched_bound = B
+        self._dispatched_bound = n_keep
+
+    # -- search reuse --------------------------------------------------------
+    def _seeds_from(self, search_ids):
+        """Step-③ neighbor ids -> batched-insert discovery seeds.
+
+        Consulted only when the batched two-phase insert is active and
+        cfg.reuse_search is on; the per-doc path and reuse_search=False
+        rebuild graphs without any dependence on the admission search
+        (the bit-identity reference configurations)."""
+        if (search_ids is None or not self.hnsw_cfg.batched_insert
+                or not getattr(self.cfg, "reuse_search", True)):
+            return None
+        return jnp.asarray(search_ids, jnp.int32)
 
     # -- hooks ---------------------------------------------------------------
     def _after_grow(self, new_capacity: int) -> None:
@@ -94,6 +127,11 @@ class _HNSWLifecycle:
                                               new_capacity)
         self.cfg = dataclasses.replace(self.cfg, capacity=new_capacity)
         self._after_grow(new_capacity)
+        # growth already pays a recompile, so one host sync is cheap here:
+        # re-derive the sync-free occupancy bound instead of carrying the
+        # accumulated over-charges into the new capacity window
+        self._known_count = self.inserted
+        self._dispatched_bound = 0
 
     def save(self, ckpt_dir: str, step: int, async_write: bool = False):
         """Checkpoint the evolving index (HNSWState is a pytree).
@@ -112,7 +150,9 @@ class _HNSWLifecycle:
     def restore(self, ckpt_dir: str, step: int | None = None) -> int:
         from repro.train import checkpoint as ckpt
         step = ckpt.latest_step(ckpt_dir) if step is None else step
-        assert step is not None, "no committed checkpoint found"
+        if step is None:     # a bare assert would vanish under python -O
+            raise FileNotFoundError(
+                f"no committed checkpoint found in {ckpt_dir!r}")
         meta = ckpt.manifest(ckpt_dir, step)
         cap = int(meta.get("capacity", self.hnsw_cfg.capacity))
         target = max(cap, self.hnsw_cfg.capacity)
@@ -207,7 +247,7 @@ class HNSWBitmapBackend(_HNSWLifecycle):
                              jnp.asarray(lane, jnp.float32), -jnp.inf)
         return ids, sims
 
-    def insert(self, sig: SigBatch, keep):
+    def insert(self, sig: SigBatch, keep, search_ids=None):
         B = sig.bitmaps.shape[0]
         levels = jnp.asarray(sample_levels(
             B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
@@ -224,7 +264,8 @@ class HNSWBitmapBackend(_HNSWLifecycle):
                 np.asarray(sig.sigs)[order]
         self.state, _ = hnsw_insert_batch(self.hnsw_cfg, self.state,
                                           sig.bitmaps, sig.pcs, levels,
-                                          jnp.asarray(keep))
+                                          jnp.asarray(keep),
+                                          seed_ids=self._seeds_from(search_ids))
         return self.state.count     # timing handle (no sync implied)
 
     # -- lifecycle hooks (exact-verify signature store tracks capacity) ------
@@ -276,7 +317,8 @@ class RawHNSWBackend(_HNSWLifecycle):
             capacity=cfg.capacity, words=cfg.num_hashes, M=cfg.M, M0=cfg.M0,
             ef_construction=cfg.ef_construction, ef_search=cfg.ef_search,
             max_level=cfg.max_level, metric=metric,
-            query_chunk=cfg.query_chunk)
+            query_chunk=cfg.query_chunk,
+            batched_insert=cfg.batched_insert)
         self.state: HNSWState = hnsw_init(self.hnsw_cfg)
         self._batches = 0     # level-seed basis: monotone, sync-free
 
@@ -307,7 +349,7 @@ class RawHNSWBackend(_HNSWLifecycle):
     def search(self, sig: SigBatch):
         return hnsw_search(self.hnsw_cfg, self.state, sig.sigs, k=self.cfg.k)
 
-    def insert(self, sig: SigBatch, keep):
+    def insert(self, sig: SigBatch, keep, search_ids=None):
         B = sig.sigs.shape[0]
         levels = jnp.asarray(sample_levels(
             B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
@@ -316,7 +358,8 @@ class RawHNSWBackend(_HNSWLifecycle):
         pcs = jnp.zeros(B, jnp.int32)          # unused by raw metrics
         self.state, _ = hnsw_insert_batch(self.hnsw_cfg, self.state,
                                           sig.sigs, pcs, levels,
-                                          jnp.asarray(keep))
+                                          jnp.asarray(keep),
+                                          seed_ids=self._seeds_from(search_ids))
         return self.state.count     # timing handle (no sync implied)
 
     def stats_schema(self) -> tuple[str, ...]:

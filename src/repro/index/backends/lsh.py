@@ -82,7 +82,9 @@ class _BandedLSHBase:
         j = int(np.argmax(sims))
         return int(cand[j]), float(sims[j])
 
-    def insert(self, sig: SigBatch, keep) -> None:
+    def insert(self, sig: SigBatch, keep, search_ids=None) -> None:
+        # search_ids (the step-③ reuse hook) is advisory and unused here:
+        # bucket insertion re-derives everything from the stashed band keys
         assert self._qkeys is not None, "insert() before search()"
         new_idx = np.flatnonzero(np.asarray(keep))
         if self.n + len(new_idx) > self.capacity:
@@ -122,7 +124,9 @@ class _BandedLSHBase:
     def restore(self, ckpt_dir: str, step: int | None = None) -> int:
         from repro.train import checkpoint as ckpt
         step = ckpt.latest_step(ckpt_dir) if step is None else step
-        assert step is not None, "no committed checkpoint found"
+        if step is None:     # a bare assert would vanish under python -O
+            raise FileNotFoundError(
+                f"no committed checkpoint found in {ckpt_dir!r}")
         meta = ckpt.manifest(ckpt_dir, step)
         cap = int(meta.get("capacity", self.capacity))
         target = max(cap, self.capacity)

@@ -119,7 +119,7 @@ class PrefixFilterBackend:
                 kept.append(i)
         return keep, hit
 
-    def insert(self, sig: SigBatch, keep) -> None:
+    def insert(self, sig: SigBatch, keep, search_ids=None) -> None:
         for i in np.flatnonzero(np.asarray(keep)):
             s = self._batch_sets[i]
             self.freq.update(s)
@@ -158,7 +158,9 @@ class PrefixFilterBackend:
     def restore(self, ckpt_dir: str, step: int | None = None) -> int:
         from repro.train import checkpoint as ckpt
         step = ckpt.latest_step(ckpt_dir) if step is None else step
-        assert step is not None, "no committed checkpoint found"
+        if step is None:     # a bare assert would vanish under python -O
+            raise FileNotFoundError(
+                f"no committed checkpoint found in {ckpt_dir!r}")
         meta = ckpt.manifest(ckpt_dir, step)
         n = int(meta["n_docs"])
         # shapes come from the offsets themselves; restore with 0-size

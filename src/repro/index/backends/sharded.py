@@ -17,6 +17,11 @@ Search memory: the per-shard batched HNSW search inherits the memory-lean
 defaults from core/hnsw.py — packed visited bitsets and capacity-derived
 query chunking — via `FoldConfig.query_chunk` (cfg.hnsw() carries it into
 the fused step's hnsw_search calls).
+
+Insertion: the fused step uses the two-phase batched insert
+(`FoldConfig.batched_insert`) and seeds it with the ids the local
+sub-graph search just retrieved (`FoldConfig.reuse_search`) — one graph
+walk per document per shard, shared between admission and ingest.
 """
 from __future__ import annotations
 
@@ -56,7 +61,7 @@ class ShardedDedupBackend:
         self.states = sharded_init(self.hnsw_cfg, mesh, axis)
         self._step = jax.jit(make_sharded_dedup_step(
             self.hnsw_cfg, mesh, tau=bitmap_tau(cfg), k=cfg.k, axis=axis,
-            masked=True))
+            masked=True, reuse_search=getattr(cfg, "reuse_search", True)))
         self._batches = 0
         # sync-free per-shard occupancy bound (no growth path for the
         # sharded index yet: we must refuse, not silently drop, on overflow)

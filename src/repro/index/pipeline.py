@@ -18,6 +18,7 @@ identical, they just don't overlap.
 from __future__ import annotations
 
 import functools
+import inspect
 import time
 from typing import Any
 
@@ -92,6 +93,16 @@ class DedupPipeline:
         self._spec = spec
         self._seeds = (hash_seeds(spec.num_hashes, spec.seed)
                        if ({"sigs", "bitmaps"} & spec.needs) else None)
+        # extended insert contract (search reuse): only pass the step-③
+        # neighbor ids to backends whose insert declares the parameter, so
+        # third-party backends written against the old 2-arg surface keep
+        # working unchanged
+        try:
+            self._insert_takes_search_ids = ("search_ids" in inspect
+                                             .signature(backend.insert)
+                                             .parameters)
+        except (TypeError, ValueError):
+            self._insert_takes_search_ids = False
 
     # -- lifecycle (delegated) ----------------------------------------------
     @property
@@ -137,6 +148,12 @@ class DedupPipeline:
             pcs = bm.popcount(bitmaps)
         return SigBatch(sigs=sigs, bitmaps=bitmaps, pcs=pcs,
                         shingles=sh if "shingles" in spec.needs else None)
+
+    def _insert(self, sig: SigBatch, keep, search_ids):
+        """Step ⑤ with the extended search-reuse contract (see protocol)."""
+        if self._insert_takes_search_ids:
+            return self.backend.insert(sig, keep, search_ids=search_ids)
+        return self.backend.insert(sig, keep)
 
     # -- steps ②-⑤ ----------------------------------------------------------
     def dedup_step(self, sig: SigBatch, valid=None,
@@ -194,7 +211,7 @@ class DedupPipeline:
             keep = keep & jnp.asarray(valid)
 
         t0 = time.perf_counter()
-        handle = be.insert(sig, keep)
+        handle = self._insert(sig, keep, ids)
         if block:
             if handle is not None:   # device insert: charge it to t_insert
                 _ready(handle)
@@ -227,7 +244,7 @@ class DedupPipeline:
             timers["t_in_batch"] = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        handle = be.insert(sig, keep)
+        handle = self._insert(sig, keep, ids)
         if block:
             if handle is not None:
                 _ready(handle)

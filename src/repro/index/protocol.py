@@ -103,10 +103,28 @@ class DedupBackend(Protocol):
       batch_sim(sig) -> (B, B)       step-② similarity matrix
       search(sig) -> (ids, sims)     step-③: (B, k) neighbors vs the
                                      *pre-batch* corpus; -1 / -inf = none
-      insert(sig, keep)              step-⑤: admit keep-masked docs; MAY
+      insert(sig, keep, search_ids=None)
+                                     step-⑤: admit keep-masked docs; MAY
                                      return a device array for the pipeline
                                      to block on when timing the stage
                                      (None for synchronous host inserts).
+                                     SEARCH-REUSE CONTRACT: when the caller
+                                     already searched the index for these
+                                     exact rows (the admission loop always
+                                     has), it passes the step-③ neighbor
+                                     ids as `search_ids` ((B, k) int32,
+                                     -1 = none). A backend MAY use them to
+                                     seed insertion-time candidate
+                                     discovery (the HNSW backends seed the
+                                     batched insert's level-0 beam) and
+                                     MUST treat them as advisory: ignoring
+                                     them is always correct, and they never
+                                     change which rows are admitted. The
+                                     parameter is optional — DedupPipeline
+                                     inspects the signature and only passes
+                                     it to backends that declare it, so
+                                     pre-existing third-party backends keep
+                                     working unchanged.
                                      OVERFLOW CONTRACT: a backend must never
                                      silently drop a keep-row at capacity —
                                      the caller's verdicts would claim
@@ -157,7 +175,8 @@ class DedupBackend(Protocol):
 
     def batch_sim(self, sig: SigBatch) -> Any: ...
     def search(self, sig: SigBatch) -> tuple[Any, Any]: ...
-    def insert(self, sig: SigBatch, keep: Any) -> Any: ...
+    def insert(self, sig: SigBatch, keep: Any,
+               search_ids: Any | None = None) -> Any: ...
     def grow(self, new_capacity: int) -> None: ...
     def save(self, ckpt_dir: str, step: int,
              async_write: bool = False) -> None: ...

@@ -48,6 +48,7 @@ class BatchOutcome:
     ids: np.ndarray            # (B, k) int32
     sims: np.ndarray           # (B, k) f32
     wall_s: float              # submit -> materialize (pipelined latency)
+    stage_times: dict | None = None   # Fig. 7 per-stage seconds (sampled)
 
 
 class PipelinedExecutor:
@@ -57,15 +58,28 @@ class PipelinedExecutor:
     submission order (the service wires metrics + verdict recording here).
     depth=0 degenerates to fully synchronous execution (each submit blocks
     on its own result) — the comparison arm in benchmarks.
+
+    timers_every=N (0 = never) runs every Nth submitted batch in blocking
+    timer mode — the Fig. 7 per-stage breakdown (t_in_batch / t_search /
+    t_insert, or t_fused_step) lands in that batch's
+    BatchOutcome.stage_times. A timed batch cannot overlap (the per-stage
+    walls require blocking between stages), so this is sampled profiling:
+    one batch in every N pays the pipeline bubble. The very first batch is
+    never sampled — it pays XLA compilation (seconds), which would swamp
+    the latency histograms with one absurd sample.
     """
 
     def __init__(self, pipe: DedupPipeline, depth: int = 2,
-                 on_outcome: Callable[[BatchOutcome], Any] | None = None):
+                 on_outcome: Callable[[BatchOutcome], Any] | None = None,
+                 timers_every: int = 0):
         self.pipe = pipe
         self.depth = max(int(depth), 0)
         self.on_outcome = on_outcome
+        self.timers_every = max(int(timers_every), 0)
+        self._submitted = 0
         self._inflight: collections.deque[tuple[MicroBatch, StepResult,
-                                                float]] = collections.deque()
+                                                float, dict | None]] = \
+            collections.deque()
 
     @property
     def inflight(self) -> int:
@@ -75,9 +89,12 @@ class PipelinedExecutor:
         """Dispatch one micro-batch; may materialize older ones to keep the
         pipeline no more than `depth` deep."""
         t0 = time.perf_counter()
+        timers = ({} if self.timers_every and self._submitted > 0
+                  and self._submitted % self.timers_every == 0 else None)
+        self._submitted += 1
         sig = self.pipe.signatures(mb.tokens, mb.lengths)
-        res = self.pipe.dedup_step(sig, valid=mb.valid)
-        self._inflight.append((mb, res, t0))
+        res = self.pipe.dedup_step(sig, valid=mb.valid, timers=timers)
+        self._inflight.append((mb, res, t0, timers))
         while len(self._inflight) > self.depth:
             self._collect_one()
 
@@ -87,7 +104,7 @@ class PipelinedExecutor:
             self._collect_one()
 
     def _collect_one(self) -> BatchOutcome:
-        mb, res, t0 = self._inflight.popleft()
+        mb, res, t0, timers = self._inflight.popleft()
         keep = np.asarray(res.keep)            # blocks until the batch is done
         out = BatchOutcome(
             batch=mb,
@@ -96,6 +113,7 @@ class PipelinedExecutor:
             ids=np.asarray(res.ids),
             sims=np.asarray(res.sims),
             wall_s=time.perf_counter() - t0,
+            stage_times=timers,
         )
         if self.on_outcome is not None:
             self.on_outcome(out)

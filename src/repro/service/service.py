@@ -58,6 +58,11 @@ class ServiceConfig:
     batch_buckets: tuple[int, ...] | None = None
     # pipelining
     pipeline_depth: int = 2
+    # Fig. 7 stage-breakdown sampling: every Nth micro-batch runs in
+    # blocking timer mode and its t_in_batch / t_search / t_insert land in
+    # the stats() latency histograms (0 disables). A timed batch gives up
+    # its async overlap, so keep N well above the pipeline depth.
+    stage_timer_every: int = 32
     # index lifecycle
     grow_watermark: float = 0.85
     growth_factor: float = 2.0
@@ -127,7 +132,8 @@ class DedupService:
         self.metrics = MetricsRegistry()
         self.executor = PipelinedExecutor(
             self.pipeline, depth=cfg.pipeline_depth,
-            on_outcome=self._record_outcome)
+            on_outcome=self._record_outcome,
+            timers_every=cfg.stage_timer_every)
         self._next_id = 0
         self._verdicts: dict[int, DocVerdict] = {}
 
@@ -200,6 +206,9 @@ class DedupService:
     def _record_outcome(self, out: BatchOutcome) -> None:
         mb = out.batch
         self.metrics.observe("batch_ms", out.wall_s * 1e3)
+        if out.stage_times:      # sampled Fig. 7 breakdown (stage_timer_every)
+            for key, secs in out.stage_times.items():
+                self.metrics.observe(f"{key}_ms", secs * 1e3)
         self.metrics.inc("docs_out", mb.n_docs)
         best = out.sims.argmax(axis=-1)
         rows = np.arange(len(best))

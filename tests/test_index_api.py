@@ -465,6 +465,73 @@ def test_flat_lsh_budget_counts_distinct_candidates():
     assert ids[0, 0] == 1 and sims[0, 0] >= TAU
 
 
+# ------------------------------------------------ capacity-guard accounting
+def test_guard_capacity_charges_kept_rows_for_host_masks():
+    """Satellite regression: the sync-free occupancy bound used to charge
+    the full batch size B even for host-resident masks, so a near-capacity
+    index paid a host sync on EVERY batch; a numpy mask now charges only
+    its kept-row count (and the post-sync bound is the exact count)."""
+    from repro.index import make
+    be = make("hnsw", cfg=FoldConfig(capacity=64, M=8, M0=16,
+                                     ef_construction=16, ef_search=16))
+    keep = np.zeros(48, bool)
+    keep[:3] = True
+    be._guard_capacity(keep)
+    assert be._dispatched_bound == 3        # not 48
+    # a second batch still fits sync-free even though 2 * B > capacity
+    be._guard_capacity(keep)
+    assert be._dispatched_bound == 6
+    # device masks cannot be read without a sync: conservative B charge
+    be._guard_capacity(jnp.asarray(keep))
+    assert be._dispatched_bound == 6 + 48
+
+
+def test_guard_capacity_rederived_after_grow():
+    """Satellite: grow() re-anchors the sync-free bound (one cheap sync on
+    a path that recompiles anyway) instead of carrying stale over-charges
+    into the new capacity window."""
+    from repro.index import make
+    be = make("hnsw", cfg=FoldConfig(capacity=64, M=8, M0=16,
+                                     ef_construction=16, ef_search=16))
+    be._guard_capacity(jnp.zeros(40, bool))        # conservative charge: 40
+    assert be._dispatched_bound == 40
+    be.grow(256)
+    assert be._dispatched_bound == 0
+    assert be._known_count == be.inserted == 0
+    assert be.capacity == 256
+
+
+def test_replay_is_duplicate_with_and_without_reuse_search():
+    """The search-reuse seeding changes WHICH equivalent-recall graph is
+    built, never admission correctness: replaying an ingested batch must
+    come back all-duplicate under both configurations."""
+    import dataclasses
+    (t, l), = _stream(1, 64)
+    for reuse in (True, False):
+        pipe = make_pipeline("hnsw", cfg=dataclasses.replace(
+            FC, reuse_search=reuse))
+        keep, _ = pipe.process_batch(t, l)
+        assert np.asarray(keep).sum() > 0
+        replay, _ = pipe.process_batch(t, l)
+        assert np.asarray(replay).sum() == 0, f"reuse_search={reuse}"
+
+
+# ----------------------------------------------- restore error contract
+@pytest.mark.parametrize("key", ["hnsw", "hnsw_raw", "dpk", "flat_lsh",
+                                 "brute", "prefix_filter"])
+def test_restore_missing_checkpoint_raises_filenotfound(tmp_path, key):
+    """Satellite regression: 'no committed checkpoint' used to be a bare
+    assert that vanishes under `python -O`; every backend now raises
+    FileNotFoundError naming the directory."""
+    pipe = make_pipeline(key, cfg=FC)
+    with pytest.raises(FileNotFoundError, match="no committed checkpoint"):
+        pipe.restore(str(tmp_path))
+    try:
+        pipe.restore(str(tmp_path))
+    except FileNotFoundError as e:
+        assert str(tmp_path) in str(e)
+
+
 # ------------------------------------------------- snapshots & round-trips
 @pytest.mark.parametrize("key", ["hnsw", "dpk", "brute", "prefix_filter"])
 def test_restore_then_grow_roundtrip(key):
