@@ -1,0 +1,159 @@
+"""Steady-state churn at fixed capacity (the evolving-dataset regime).
+
+The paper's append-only benchmarks never exercise the index once the corpus
+stops growing; this one holds a sliding ingestion window at a FIXED
+capacity: every steady-state step deletes the oldest batch of admitted docs
+(TTL-style expiry via the deletion contract) and ingests a fresh one, with
+compaction triggered by the tombstone watermark. A memory-bounded design
+that cannot un-insert (LSHBloom-style Bloom filters) structurally cannot
+run this regime at all — which is the comparison the churn numbers exist
+to make.
+
+Measured after >= 3 full expire/refill cycles:
+  - throughput (us/doc) in steady state (delete + compact + ingest),
+  - probe recall on the churned index BEFORE the final compaction (dirty:
+    tombstones still in the graph), AFTER it, and on a freshly built index
+    of the identical live set — the acceptance bar is
+    recall_fresh - recall_churned <= 0.02 with capacity never growing.
+  - a deletion-unsupported backend (dpk) raising from delete().
+
+Probes are lightly mutated copies (~2% token substitutions) of live docs;
+a probe scores iff its source doc's slot appears in the top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from benchmarks.common import build_pipeline
+from repro.data.corpus import DATASET_PRESETS, SyntheticCorpus
+
+COMPACT_WATERMARK = 0.25
+EDIT_RATE = 0.02
+CYCLES = 3
+
+
+def _mutate(rng, tokens: np.ndarray, length: int, vocab: int) -> np.ndarray:
+    out = tokens.copy()
+    m = max(1, int(EDIT_RATE * length))
+    pos = rng.choice(length, size=min(m, length), replace=False)
+    out[pos] = rng.integers(1, vocab, size=len(pos))
+    return out
+
+
+def _probe_recall(pipe, ptoks, plens, expect) -> float:
+    """Fraction of probes whose source slot is retrieved in the top-k."""
+    sig = pipe.signatures(ptoks, plens)
+    ids, _ = pipe.backend.search(sig)
+    ids = np.asarray(ids)
+    return float(np.mean([e in row for e, row in zip(expect, ids)]))
+
+
+def run(quick: bool = False):
+    cap, batch = (1024, 128) if quick else (8192, 256)
+    window_batches = max(2, (cap // 2) // batch)
+    corpus_cfg = dataclasses.replace(DATASET_PRESETS["lm1b"], seed=11)
+    src = SyntheticCorpus(corpus_cfg)
+
+    pipe = build_pipeline("hnsw", capacity=cap)
+    be = pipe.backend
+    be.track_slots = True
+    live: deque = deque()      # (slots, kept tokens, kept lengths) per batch
+
+    def ingest() -> float:
+        toks, lens, _ = src.next_batch(batch)
+        t0 = time.perf_counter()
+        keep, _ = pipe.process_batch(toks, lens)
+        wall = time.perf_counter() - t0
+        logs = be.pop_slot_log()
+        slots = logs[0] if logs else np.empty(0, np.int32)
+        kept = np.flatnonzero(keep)
+        live.append((slots, toks[kept], lens[kept]))
+        return wall
+
+    for _ in range(window_batches):            # fill the window
+        ingest()
+
+    walls: list[float] = []
+    compactions = 0
+    for _ in range(CYCLES):                    # >= 3 full expire/refill cycles
+        for _ in range(window_batches):
+            t0 = time.perf_counter()
+            old_slots, _, _ = live.popleft()
+            pipe.delete(old_slots)
+            if pipe.dead_fraction >= COMPACT_WATERMARK:
+                pipe.compact()
+                compactions += 1
+            dt = time.perf_counter() - t0
+            walls.append(dt + ingest())
+
+    grew = pipe.capacity != cap
+    assert not grew, f"churn must not grow capacity: {pipe.capacity} != {cap}"
+    dead_frac_pre = pipe.dead_fraction
+
+    # ---- probes: mutated copies of the final live set (generated once)
+    rng = np.random.default_rng(5)
+    flat = [(bi, rj) for bi, (_, t, _) in enumerate(live)
+            for rj in range(len(t))]
+    n_live = len(flat)
+    pick = rng.choice(n_live, size=min(256, n_live), replace=False)
+    ptoks, plens, churn_expect, fresh_expect = [], [], [], []
+    offsets = np.cumsum([0] + [len(t) for _, t, _ in live])
+    for p in pick:
+        bi, rj = flat[p]
+        slots, toks, lens = live[bi]
+        L = int(lens[rj])
+        ptoks.append(_mutate(rng, toks[rj], L, corpus_cfg.vocab))
+        plens.append(L)
+        churn_expect.append(int(slots[rj]))
+        fresh_expect.append(int(offsets[bi] + rj))
+    ptoks = np.stack(ptoks)
+    plens = np.asarray(plens, np.int32)
+
+    rec_dirty = _probe_recall(pipe, ptoks, plens, churn_expect)
+    t0 = time.perf_counter()
+    pipe.compact()
+    t_compact = time.perf_counter() - t0
+    compactions += 1
+    rec_churned = _probe_recall(pipe, ptoks, plens, churn_expect)
+
+    # ---- reference: a freshly built index of the identical live set
+    # (admission bypassed — every live doc is inserted, slots 0..n-1)
+    fresh = build_pipeline("hnsw", capacity=cap)
+    for slots, toks, lens in live:
+        if not len(toks):
+            continue
+        sig = fresh.signatures(toks, lens)
+        fresh.backend.insert(sig, np.ones(len(toks), bool))
+    rec_fresh = _probe_recall(fresh, ptoks, plens, fresh_expect)
+
+    delta = rec_fresh - rec_churned
+    assert delta <= 0.02, (
+        f"churned recall degraded past the bar: fresh={rec_fresh:.3f} "
+        f"churned={rec_churned:.3f} delta={delta:.3f}")
+
+    us = np.mean(walls) / batch * 1e6
+    rows = [(f"churn/steady_state", round(float(us), 1),
+             f"recall_churned={rec_churned:.3f};recall_fresh={rec_fresh:.3f};"
+             f"delta={delta:.3f};recall_dirty={rec_dirty:.3f};"
+             f"dead_frac_pre={dead_frac_pre:.3f};compactions={compactions};"
+             f"t_compact_ms={t_compact * 1e3:.0f};live={n_live};"
+             f"capacity={pipe.capacity};grew={int(grew)}")]
+
+    # a backend without supports_deletion must refuse loudly
+    dpk = build_pipeline("dpk")
+    try:
+        dpk.delete([0])
+        raise AssertionError("dpk.delete() should raise NotImplementedError")
+    except NotImplementedError:
+        rows.append(("churn/unsupported_delete", 0.0,
+                     "raises=NotImplementedError"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=True):
+        print(",".join(str(x) for x in r))

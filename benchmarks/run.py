@@ -6,6 +6,8 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 Prints `name,us_per_call,derived` CSV rows per the harness contract, where
 us_per_call is the per-document processing latency of the subject system
 and `derived` carries the figure's headline metric (recall, speedup, ...).
+Each benchmark additionally lands a machine-readable `BENCH_<name>.json`
+at the repo root for trend tracking across commits.
 
 --backend runs the generic continuous-ingestion protocol for ONE registered
 repro.index backend (any key from repro.index.available()) — the smoke path
@@ -14,13 +16,32 @@ for new backend plugins.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 
 SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
             "fig9_largescale", "table3_collisions", "appendix_hamming",
             "dist_scaling", "service_throughput", "search_mem", "insert_bench",
-            "roofline"]
+            "roofline", "churn_bench"]
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _emit_json(name: str, rows, quick: bool) -> None:
+    """Write BENCH_<name>.json at the repo root (machine-readable twin of
+    the CSV rows; `name` is the section or backend key)."""
+    payload = {
+        "benchmark": name,
+        "quick": quick,
+        "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                 for r in rows],
+    }
+    path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
 
 
 def run_backend(name: str, quick: bool = False,
@@ -48,13 +69,16 @@ def run_backend(name: str, quick: bool = False,
 
 
 def main() -> None:
+    from repro.index import available
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller corpora / fewer cycles")
-    ap.add_argument("--only", default=None)
-    ap.add_argument("--backend", default=None,
+    ap.add_argument("--only", default=None, choices=SECTIONS,
+                    help="run one paper section")
+    ap.add_argument("--backend", default=None, choices=sorted(available()),
                     help="benchmark one registered repro.index backend "
-                         "instead of the paper sections")
+                         "instead of the paper sections "
+                         f"(registered: {', '.join(sorted(available()))})")
     ap.add_argument("--query-chunk", type=int, default=None,
                     help="batched-search chunk for the --backend run "
                          "(unset = capacity-derived default, 0 = unchunked)")
@@ -62,9 +86,11 @@ def main() -> None:
 
     if args.backend:
         print("name,us_per_call,derived")
-        for r in run_backend(args.backend, quick=args.quick,
-                             query_chunk=args.query_chunk):
+        rows = run_backend(args.backend, quick=args.quick,
+                           query_chunk=args.query_chunk)
+        for r in rows:
             print(",".join(str(x) for x in r), flush=True)
+        _emit_json(f"backend_{args.backend}", rows, args.quick)
         return
 
     sections = [args.only] if args.only else SECTIONS
@@ -76,6 +102,7 @@ def main() -> None:
             rows = mod.run(quick=args.quick)
             for r in rows:
                 print(",".join(str(x) for x in r), flush=True)
+            _emit_json(name, rows, args.quick)
         except Exception as e:  # keep the suite going; report the failure
             ok = False
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)

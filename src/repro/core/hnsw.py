@@ -67,8 +67,8 @@ from repro.core.bitset import (bitset_add, bitset_nbytes, bitset_test,
                                bitset_zeros)
 
 __all__ = ["HNSWConfig", "HNSWState", "hnsw_init", "hnsw_grow",
-           "hnsw_insert_batch", "hnsw_search", "sample_levels", "METRICS",
-           "auto_query_chunk", "visited_nbytes"]
+           "hnsw_insert_batch", "hnsw_search", "hnsw_delete", "hnsw_compact",
+           "sample_levels", "METRICS", "auto_query_chunk", "visited_nbytes"]
 
 METRICS = ("bitmap_jaccard", "minhash_jaccard", "hamming")
 
@@ -119,13 +119,23 @@ class HNSWConfig(NamedTuple):
 
 
 class HNSWState(NamedTuple):
+    """Dense functional index state.
+
+    `count` is a HIGH-WATER mark: slots < count have been used at some
+    point; slots with node_level == -1 below the mark are free-listed
+    (reclaimed by hnsw_compact) and re-usable via hnsw_insert_batch's
+    `free_slots`. `dead` tombstones occupied slots: a dead node stays
+    navigable (the beam traverses it for connectivity, hnswlib-style) but
+    is filtered from returned top-k results and from new nodes' adjacency.
+    """
     vectors: jnp.ndarray      # (cap, W) uint32
     pb: jnp.ndarray           # (cap,) int32 cached popcounts
     neighbors: jnp.ndarray    # (L+1, cap, M0) int32
-    node_level: jnp.ndarray   # (cap,) int32
+    node_level: jnp.ndarray   # (cap,) int32  (-1 = unused / reclaimed slot)
+    dead: jnp.ndarray         # (cap,) bool   tombstones (live = lvl>=0 & ~dead)
     entry: jnp.ndarray        # () int32
     top_level: jnp.ndarray    # () int32
-    count: jnp.ndarray        # () int32
+    count: jnp.ndarray        # () int32  high-water slot mark
 
 
 def visited_nbytes(cfg: HNSWConfig) -> int:
@@ -160,6 +170,7 @@ def hnsw_init(cfg: HNSWConfig) -> HNSWState:
         pb=jnp.zeros((cap,), jnp.int32),
         neighbors=jnp.full((cfg.max_level + 1, cap, cfg.M0), -1, jnp.int32),
         node_level=jnp.full((cap,), -1, jnp.int32),
+        dead=jnp.zeros((cap,), jnp.bool_),
         entry=jnp.int32(-1),
         top_level=jnp.int32(-1),
         count=jnp.int32(0),
@@ -189,6 +200,7 @@ def hnsw_grow(cfg: HNSWConfig, state: HNSWState,
         neighbors=jnp.pad(state.neighbors, ((0, 0), (0, pad), (0, 0)),
                           constant_values=-1),
         node_level=jnp.pad(state.node_level, (0, pad), constant_values=-1),
+        dead=jnp.pad(state.dead, (0, pad)),
         entry=state.entry,
         top_level=state.top_level,
         count=state.count,
@@ -258,6 +270,21 @@ def _dist_ids(cfg, state: HNSWState, q, qpc, ids) -> jnp.ndarray:
     safe = jnp.maximum(ids, 0)
     d = _dist_rows(cfg, q, qpc, state.vectors[safe], state.pb[safe])
     return jnp.where(ids >= 0, d, _INF)
+
+
+def _mask_dead_sorted(state: HNSWState, ids, d):
+    """Mask tombstoned ids out of a distance-sorted candidate list.
+
+    Dead nodes are traversed for connectivity but must never be selected —
+    not as search results, not as adjacency for new nodes. Masked entries
+    become -1/+inf and the list is re-sorted so prefix-takes skip them;
+    jnp's stable argsort makes this a no-op permutation when nothing is
+    dead (the bit-identity configurations are unaffected)."""
+    is_dead = state.dead[jnp.maximum(ids, 0)] & (ids >= 0)
+    ids = jnp.where(is_dead, -1, ids)
+    d = jnp.where(is_dead, _INF, d)
+    order = jnp.argsort(d)
+    return ids[order], d[order]
 
 
 # ------------------------------------------------------------ greedy descent
@@ -419,9 +446,12 @@ def hnsw_search(cfg: HNSWConfig, state: HNSWState, queries: jnp.ndarray,
         cur, curd = _descend(cfg, state, q, qpc, jnp.int32(0))
         ids, d, _ = _search_layer(cfg, state, q, qpc, 0, ef,
                                   cur[None], curd[None], visited)
+        # tombstoned nodes stay navigable inside the beam (connectivity)
+        # but are masked out of the returned top-k
+        ids, d = _mask_dead_sorted(state, ids, d)
         ids, d = ids[:k], d[:k]
         empty = state.count == 0
-        ids = jnp.where(empty | (ids < 0), -1, ids)
+        ids = jnp.where(empty | (ids < 0) | ~jnp.isfinite(d), -1, ids)
         sims = jnp.where(ids >= 0, 1.0 - d, -jnp.inf)
         return ids, sims
 
@@ -527,14 +557,21 @@ def _link_back(cfg, state, new_id, level: int, sel_ids, m_l: int):
             jnp.where(valid[:, None], new_rows, rows), mode="drop"))
 
 
-def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
-    """Insert a single vector with a pre-sampled level. Pure function."""
-    idx = state.count
+def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level, slot=None):
+    """Insert a single vector with a pre-sampled level. Pure function.
+
+    slot: explicit target slot (reclaimed free slots < count are legal);
+    None uses the next fresh slot. count keeps high-water semantics —
+    writing a free-listed slot below the mark does not advance it."""
+    idx = state.count if slot is None else slot
+    new_count = (state.count + 1 if slot is None
+                 else jnp.maximum(state.count, slot + 1))
     state = state._replace(
         vectors=state.vectors.at[idx].set(vec),
         pb=state.pb.at[idx].set(pc),
         node_level=state.node_level.at[idx].set(level),
-        count=state.count + 1,
+        dead=state.dead.at[idx].set(False),
+        count=new_count,
     )
 
     def first(state):
@@ -553,6 +590,9 @@ def _insert_one(cfg: HNSWConfig, state: HNSWState, vec, pc, level):
                 cand_ids, cand_d, _ = _search_layer(
                     cfg, st, vec, pc, lev, cfg.ef_construction,
                     s_ids, s_d, visited)
+                # new nodes must link only to LIVE nodes: tombstoned beam
+                # entries are masked out before any selection
+                cand_ids, cand_d = _mask_dead_sorted(st, cand_ids, cand_d)
                 # the beam is distance-sorted with -1 in empty slots, so the
                 # first m_l entries ARE the selected back-link neighbors
                 sel = cand_ids[:m_l]
@@ -745,7 +785,8 @@ def _commit_batch(cfg: HNSWConfig, state: HNSWState, levels, admit, slots,
 def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
                       pcs: jnp.ndarray, levels: jnp.ndarray,
                       mask: jnp.ndarray,
-                      seed_ids: jnp.ndarray | None = None
+                      seed_ids: jnp.ndarray | None = None,
+                      free_slots: jnp.ndarray | None = None
                       ) -> tuple[HNSWState, jnp.ndarray]:
     """Insert a batch in deterministic row order. mask=False skips.
 
@@ -756,6 +797,12 @@ def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
     search results); consumed by the batched path to seed candidate
     discovery so the graph is not re-traversed from the top for rows the
     pipeline just searched. The per-doc path ignores them.
+    free_slots: optional (F,) int32, -1 padded — reclaimed slot ids (from
+    hnsw_compact: node_level == -1 below the count mark, fully unlinked)
+    consumed FIRST, in order, before fresh capacity. Because reclaimed
+    slots are unreachable in the pre-batch graph, phase-A candidate ids
+    can never collide with a reused slot. `count` keeps its high-water
+    semantics, so reuse does not advance it.
 
     Two organizations, selected by `cfg.batched_insert` (see HNSWConfig):
     the default two-phase batched commit discovers candidates for ALL rows
@@ -766,43 +813,63 @@ def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
     them (phase A degenerates to the sequential search).
 
     Returns (state, n_inserted) where n_inserted is a () int32 device scalar
-    counting the rows ACTUALLY inserted. When the index is full, masked rows
-    are skipped — n_inserted < mask.sum() is the caller's overflow signal;
-    the `repro.index` backends refuse the batch rather than let a verdict
+    counting the rows ACTUALLY inserted. When the index is full (no free
+    slots left AND the high-water mark hits capacity), masked rows are
+    skipped — n_inserted < mask.sum() is the caller's overflow signal; the
+    `repro.index` backends refuse the batch rather than let a verdict
     claim admission for a dropped row (see DedupBackend.insert).
     """
+    mask = mask.astype(jnp.bool_)
+    count0 = state.count
+    # slot assignment mirrors the sequential order exactly: kept rows drain
+    # the free list first, then fill consecutive fresh slots; rows past
+    # capacity are skipped (overflow signal)
+    offs = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    if free_slots is None:
+        slots = count0 + offs
+        fresh = mask
+    else:
+        free_slots = jnp.asarray(free_slots, jnp.int32)
+        n_free = jnp.sum(free_slots >= 0, dtype=jnp.int32)
+        use_free = (offs >= 0) & (offs < n_free)
+        gather = jnp.clip(offs, 0, free_slots.shape[0] - 1)
+        slots = jnp.where(use_free, free_slots[gather],
+                          count0 + offs - n_free)
+        fresh = mask & ~use_free
+    admit = mask & (slots >= 0) & (slots < cfg.capacity)
+    n_ins = jnp.sum(admit, dtype=jnp.int32)
+    # only FRESH slots advance the high-water mark
+    new_count = count0 + jnp.sum(admit & fresh, dtype=jnp.int32)
+
     if not cfg.batched_insert:
         def body(i, carry):
             st, n = carry
 
             def do(c):
                 st, n = c
-                return _insert_one(cfg, st, vecs[i], pcs[i], levels[i]), n + 1
+                return (_insert_one(cfg, st, vecs[i], pcs[i], levels[i],
+                                    slot=slots[i]), n + 1)
 
-            full = st.count >= cfg.capacity
-            return jax.lax.cond(mask[i] & ~full, do, lambda c: c, (st, n))
+            return jax.lax.cond(admit[i], do, lambda c: c, (st, n))
 
         return jax.lax.fori_loop(0, vecs.shape[0], body,
                                  (state, jnp.int32(0)))
 
     # ---- batched two-phase commit
-    mask = mask.astype(jnp.bool_)
-    count0 = state.count
-    # slot assignment mirrors the sequential order exactly: kept rows fill
-    # consecutive slots; rows past capacity are skipped (overflow signal)
-    offs = jnp.cumsum(mask.astype(jnp.int32)) - 1
-    slots = count0 + offs
-    admit = mask & (slots < cfg.capacity)
-    n_ins = jnp.sum(admit, dtype=jnp.int32)
-
     chunk = (cfg.query_chunk if cfg.query_chunk is not None
              else auto_query_chunk(cfg))
     if seed_ids is not None:
         seed_ids = jnp.asarray(seed_ids, jnp.int32)[:, :cfg.ef_construction - 1]
     # phase A runs against the pre-batch graph (reads only graph-reachable
-    # rows, all < count0 — the bulk slot write below cannot alias it)
+    # rows — never a reclaimed slot — so the bulk slot write below cannot
+    # alias it)
     cand_ids, cand_d = _discover_candidates(cfg, state, vecs, pcs, levels,
                                             seed_ids, chunk)
+    # new nodes link only to LIVE candidates: tombstoned graph nodes are
+    # masked to -1/+inf (the top-k merge in _merge_candidates drops them)
+    cand_dead = state.dead[jnp.maximum(cand_ids, 0)] & (cand_ids >= 0)
+    cand_ids = jnp.where(cand_dead, -1, cand_ids)
+    cand_d = jnp.where(cand_dead, jnp.inf, cand_d)
     pair_d = _pairwise_dists(cfg, vecs, pcs, chunk)
 
     levels = jnp.asarray(levels, jnp.int32)
@@ -811,8 +878,134 @@ def hnsw_insert_batch(cfg: HNSWConfig, state: HNSWState, vecs: jnp.ndarray,
         vectors=state.vectors.at[safe].set(vecs, mode="drop"),
         pb=state.pb.at[safe].set(pcs, mode="drop"),
         node_level=state.node_level.at[safe].set(levels, mode="drop"),
-        count=count0 + n_ins)
+        dead=state.dead.at[safe].set(False, mode="drop"),
+        count=new_count)
     fwd, sel = _merge_candidates(cfg, state, levels, admit, slots,
                                  cand_ids, cand_d, pair_d)
     state = _commit_batch(cfg, state, levels, admit, slots, fwd, sel)
     return state, n_ins
+
+
+# ------------------------------------------------------- delete & compact
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def hnsw_delete(cfg: HNSWConfig, state: HNSWState,
+                ids: jnp.ndarray) -> tuple[HNSWState, jnp.ndarray]:
+    """Tombstone a batch of node ids. O(D) scatter — no graph surgery.
+
+    ids: (D,) int32, -1 padded; out-of-range, unused, and already-dead ids
+    are ignored (callers dedup host-side; duplicate LIVE ids in one call
+    would be double-counted). Dead nodes stay navigable ghosts — the beam
+    traverses them for connectivity, hnswlib-style — but are masked from
+    returned top-k (hnsw_search) and from new nodes' adjacency
+    (hnsw_insert_batch / _insert_one). Their slots are NOT reusable until
+    hnsw_compact unlinks them. Returns (state, n_newly_dead).
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    safe = jnp.clip(ids, 0, cfg.capacity - 1)
+    valid = ((ids >= 0) & (ids < cfg.capacity)
+             & (state.node_level[safe] >= 0) & ~state.dead[safe])
+    tgt = jnp.where(valid, ids, cfg.capacity)            # OOB -> dropped
+    state = state._replace(dead=state.dead.at[tgt].set(True, mode="drop"))
+    return state, jnp.sum(valid, dtype=jnp.int32)
+
+
+def _repair_level(cfg: HNSWConfig, state: HNSWState, live, lev: int,
+                  m_l: int, chunk: int):
+    """Rebuild the level-`lev` adjacency rows that reference a dead node.
+
+    For each such row the candidate pool is its own live neighbors plus its
+    live neighbors-of-neighbors (the hnswlib repairConnectionsForUpdate
+    idea): dead hubs are bridged by wiring their live endpoints together.
+    Selection reuses the insert-time policy (_select_diverse when
+    cfg.select_heuristic, else closest-m_l), so a repaired row obeys the
+    same invariants as a freshly built one. Rows with no dead references
+    are returned unchanged. Returns the (cap, M0) repaired row matrix.
+    """
+    rows = state.neighbors[lev]                                # (cap, M0)
+    K = cfg.M0 * (1 + cfg.M0)
+    E = min(K, max(cfg.ef_construction, cfg.M0))
+
+    def one(node, row):
+        nb_dead = state.dead[jnp.maximum(row, 0)] & (row >= 0)
+        # pool: own live neighbors + every neighbor's neighbors (live only)
+        hops = state.neighbors[lev, jnp.maximum(row, 0)]       # (M0, M0)
+        hops = jnp.where((row >= 0)[:, None], hops, -1)
+        pool = jnp.concatenate([row, hops.reshape(-1)])        # (K,)
+        ok = ((pool >= 0) & live[jnp.maximum(pool, 0)] & (pool != node))
+        pool = jnp.where(ok, pool, -1)
+        # dedup: sort ids, keep first occurrence of each
+        srt = jnp.sort(pool)
+        dup = jnp.concatenate([jnp.zeros((1,), bool), srt[1:] == srt[:-1]])
+        pool = jnp.where(dup, -1, srt)
+        d = _dist_ids(cfg, state, state.vectors[node], state.pb[node], pool)
+        neg, ix = jax.lax.top_k(-d, E)
+        c_ids = jnp.where(jnp.isfinite(-neg), pool[ix], -1)
+        c_d = -neg
+        if cfg.select_heuristic:
+            div = _select_diverse(cfg, state, c_ids, c_d, m_l)
+            div_d = jnp.where(div >= 0, c_d, jnp.inf)
+            hneg, hidx = jax.lax.top_k(-div_d, cfg.M0)
+            new_row = jnp.where(jnp.isfinite(-hneg), div[hidx], -1)
+        else:
+            new_row = jnp.where(
+                (jnp.arange(cfg.M0) < m_l) & jnp.isfinite(c_d[:cfg.M0]),
+                c_ids[:cfg.M0], -1)
+        needs = (live[node] & (state.node_level[node] >= lev)
+                 & jnp.any(nb_dead))
+        return jnp.where(needs, new_row, row)
+
+    nodes = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    return _chunked_map(jax.vmap(one), (nodes, rows), chunk,
+                        pad_values=(0, -1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def hnsw_compact(cfg: HNSWConfig, state: HNSWState
+                 ) -> tuple[HNSWState, jnp.ndarray]:
+    """Online compaction: repair adjacency around tombstoned nodes, then
+    unlink them so their slots become free-listed (node_level == -1 below
+    the count high-water mark — reusable via hnsw_insert_batch free_slots).
+
+    Per level, every live row referencing a dead node is rebuilt from its
+    live neighbors-of-neighbors (_repair_level); then dead slots are fully
+    unlinked (adjacency cleared, level -> -1, dead flag cleared) and the
+    entry point is re-elected if it was tombstoned or out-ranked. `count`
+    shrinks only when the tail itself died — interior frees keep the
+    high-water mark. Returns (state, n_reclaimed).
+    """
+    qc = cfg.query_chunk if cfg.query_chunk is not None else auto_query_chunk(cfg)
+    chunk = max(64, min(qc, 1024))
+    dead0 = state.dead
+    live = (state.node_level >= 0) & ~dead0
+    repaired = [
+        _repair_level(cfg, state, live, lev, cfg.M0 if lev == 0 else cfg.M,
+                      chunk)
+        for lev in range(cfg.max_level + 1)]
+    nbrs = jnp.stack(repaired, axis=0)                   # (L+1, cap, M0)
+    # unlink the dead: clear their rows and drop any stale reference
+    nbrs = jnp.where(dead0[None, :, None], -1, nbrs)
+    ref_dead = dead0[jnp.maximum(nbrs, 0)] & (nbrs >= 0)
+    nbrs = jnp.where(ref_dead, -1, nbrs)
+    node_level = jnp.where(dead0, -1, state.node_level)
+    # entry re-election: keep the current entry iff it is live and still at
+    # the top; otherwise promote the first node of the new top level
+    ar = jnp.arange(cfg.capacity, dtype=jnp.int32)
+    lv = jnp.where(live, node_level, -1)
+    top = jnp.max(lv)
+    any_live = top >= 0
+    esafe = jnp.clip(state.entry, 0, cfg.capacity - 1)
+    keep_entry = ((state.entry >= 0) & live[esafe]
+                  & (node_level[esafe] >= top))
+    entry = jnp.where(any_live,
+                      jnp.where(keep_entry, state.entry,
+                                jnp.argmax(lv).astype(jnp.int32)),
+                      jnp.int32(-1))
+    count = jnp.max(jnp.where(live, ar + 1, 0)).astype(jnp.int32)
+    state = state._replace(
+        neighbors=nbrs,
+        node_level=node_level,
+        dead=jnp.zeros_like(dead0),
+        entry=entry,
+        top_level=jnp.where(any_live, top, jnp.int32(-1)),
+        count=count)
+    return state, jnp.sum(dead0, dtype=jnp.int32)

@@ -54,9 +54,7 @@ def sharded_state_specs(mesh: Mesh, axis: str = "data"):
     """NamedShardings for the stacked HNSWState."""
     def spec(x=None):
         return NamedSharding(mesh, P(axis))
-    return HNSWState(vectors=spec(), pb=spec(), neighbors=spec(),
-                     node_level=spec(), entry=spec(), top_level=spec(),
-                     count=spec())
+    return HNSWState(*(spec() for _ in HNSWState._fields))
 
 
 def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
@@ -156,6 +154,8 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
     out_keep = (P(), P()) if masked else (P(),)
     step = smap(
         local, mesh=mesh,
-        in_specs=(HNSWState(*(P(axis),) * 7),) + (P(axis),) * (n_in - 1),
-        out_specs=(HNSWState(*(P(axis),) * 7),) + out_keep)
+        in_specs=(HNSWState(*(P(axis),) * len(HNSWState._fields)),)
+        + (P(axis),) * (n_in - 1),
+        out_specs=(HNSWState(*(P(axis),) * len(HNSWState._fields)),)
+        + out_keep)
     return step

@@ -4,6 +4,11 @@ Per incoming document: exact MinHash-Jaccard against *every* admitted
 signature (chunked through the Pallas-backed pairwise kernel on the raw
 lanes). O(N) per doc — the 5-day column of Table 1, and the reference
 labeler for recall (the paper validates DPK as equivalent to it).
+
+Deletion is eager (no tombstones): a deleted row is masked out of every
+subsequent search and its slot goes straight onto a free list that insert
+drains before consuming fresh rows — so `dead_fraction` stays 0.0 and
+`compact()` is the protocol no-op.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import numpy as np
 
 from repro.core.bitmap import pairwise_minhash_jaccard
 from repro.core.dedup import FoldConfig
-from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec
+from repro.index.protocol import BATCH_FIRST, DedupBackend, SigBatch, SigSpec
 from repro.index.registry import register
 
 __all__ = ["BruteForceBackend"]
@@ -20,14 +25,18 @@ __all__ = ["BruteForceBackend"]
 _CHUNK = 8192      # db-axis chunking bounds the (B, N) similarity temp
 
 
-class BruteForceBackend:
+class BruteForceBackend(DedupBackend):
     name = "brute"
     order = BATCH_FIRST
+    supports_deletion = True
 
     def __init__(self, cfg: FoldConfig):
         self.cfg = cfg
         self.store = np.zeros((cfg.capacity, cfg.num_hashes), np.uint32)
-        self.n = 0
+        self.n = 0                       # high-water row mark
+        self._free: list[int] = []       # deleted rows < n, reusable
+        self._free_mask = np.zeros(cfg.capacity, bool)
+        self._n_deleted = 0
 
     @property
     def sig_spec(self) -> SigSpec:
@@ -45,7 +54,11 @@ class BruteForceBackend:
 
     @property
     def inserted(self) -> int:
-        return self.n
+        return self.n - len(self._free)
+
+    @property
+    def deleted(self) -> int:
+        return self._n_deleted
 
     def batch_sim(self, sig: SigBatch):
         return pairwise_minhash_jaccard(sig.sigs, sig.sigs)
@@ -59,6 +72,9 @@ class BruteForceBackend:
             for s in range(0, self.n, _CHUNK):
                 # reduce on device: only two (B,) arrays cross to host
                 sim = pairwise_minhash_jaccard(sig.sigs, db[s:s + _CHUNK])
+                fm = self._free_mask[s:s + min(_CHUNK, self.n - s)]
+                if fm.any():         # deleted rows never win a verdict
+                    sim = jnp.where(jnp.asarray(fm)[None, :], -jnp.inf, sim)
                 j = np.asarray(jnp.argmax(sim, axis=1))
                 best = np.asarray(jnp.max(sim, axis=1))
                 better = best > sims[:, 0]
@@ -68,13 +84,35 @@ class BruteForceBackend:
 
     def insert(self, sig: SigBatch, keep, search_ids=None) -> None:
         new = np.asarray(sig.sigs)[np.asarray(keep)]
-        if self.n + len(new) > self.capacity:
+        t = min(len(new), len(self._free))
+        fresh = len(new) - t
+        if self.n + fresh > self.capacity:
             raise RuntimeError(
                 f"brute store full: {self.n} of {self.capacity} rows used "
-                f"and the batch admits {len(new)} more; call grow() — "
-                f"refusing to silently drop admitted docs")
-        self.store[self.n:self.n + len(new)] = new
-        self.n += len(new)
+                f"and the batch admits {fresh} beyond the free list; call "
+                f"grow() — refusing to silently drop admitted docs")
+        slots = np.concatenate(
+            [np.asarray(self._free[:t], np.int64),
+             self.n + np.arange(fresh, dtype=np.int64)]).astype(np.int32)
+        self._free = self._free[t:]
+        self.store[slots] = new
+        self._free_mask[slots] = False
+        self.n += fresh
+        if self.track_slots:
+            q = list(getattr(self, "_slots_q", []))
+            q.append(slots)
+            self._slots_q = q
+
+    def delete(self, ids) -> int:
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        ids = ids[(ids >= 0) & (ids < self.n)]
+        ids = ids[~self._free_mask[ids]]
+        if len(ids) == 0:
+            return 0
+        self._free_mask[ids] = True
+        self._free = sorted(self._free + [int(i) for i in ids])
+        self._n_deleted += len(ids)
+        return len(ids)
 
     def grow(self, new_capacity: int) -> None:
         if new_capacity <= self.capacity:
@@ -82,11 +120,15 @@ class BruteForceBackend:
         pad = new_capacity - self.capacity
         self.store = np.concatenate(
             [self.store, np.zeros((pad, self.cfg.num_hashes), np.uint32)])
+        self._free_mask = np.concatenate(
+            [self._free_mask, np.zeros(pad, bool)])
 
     def save(self, ckpt_dir: str, step: int, async_write: bool = False):
         from repro.train import checkpoint as ckpt
         writer = ckpt.save_async if async_write else ckpt.save
-        writer(ckpt_dir, step, {"store": self.store, "n": np.int64(self.n)},
+        writer(ckpt_dir, step,
+               {"store": self.store, "n": np.int64(self.n),
+                "free_mask": self._free_mask.astype(np.uint8)},
                extra={"capacity": self.capacity})
 
     def restore(self, ckpt_dir: str, step: int | None = None) -> int:
@@ -99,18 +141,25 @@ class BruteForceBackend:
         cap = int(meta.get("capacity", self.capacity))
         target = max(cap, self.capacity)
         tmpl = {"store": np.zeros((cap, self.cfg.num_hashes), np.uint32),
-                "n": np.int64(0)}
+                "n": np.int64(0), "free_mask": np.zeros(cap, np.uint8)}
         got = ckpt.restore(ckpt_dir, step, tmpl, device=False)
         self.store, self.n = got["store"], int(got["n"])
+        self._free_mask = np.asarray(got["free_mask"], bool)
+        # the free list round-trips through the mask; cumulative `deleted`
+        # is not persisted and restarts at the restored free count
+        self._free = [int(i) for i in np.flatnonzero(self._free_mask[:self.n])]
+        self._n_deleted = len(self._free)
+        self._slots_q = []
         if target > cap:
             self.grow(target)
         return step
 
     def stats_schema(self) -> tuple[str, ...]:
-        return ("count", "capacity")
+        return ("count", "capacity", "deleted", "free")
 
     def stats(self) -> dict:
-        return {"count": self.n, "capacity": self.capacity}
+        return {"count": self.inserted, "capacity": self.capacity,
+                "deleted": self._n_deleted, "free": len(self._free)}
 
 
 @register("brute")

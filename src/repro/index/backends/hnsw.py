@@ -13,22 +13,25 @@ FAISS baselines isolate:
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dedup import FoldConfig, bitmap_tau
-from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_grow, hnsw_init,
-                             hnsw_insert_batch, hnsw_search, sample_levels)
-from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec
+from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_compact, hnsw_delete,
+                             hnsw_grow, hnsw_init, hnsw_insert_batch,
+                             hnsw_search, sample_levels)
+from repro.index.protocol import BATCH_FIRST, DedupBackend, SigBatch, SigSpec
 from repro.index.registry import register
 from repro.kernels import ops
 
 __all__ = ["HNSWBitmapBackend", "RawHNSWBackend"]
 
 
-class _HNSWLifecycle:
-    """Shared functional-HNSW capacity lifecycle + overflow refusal.
+class _HNSWLifecycle(DedupBackend):
+    """Shared functional-HNSW capacity lifecycle + overflow refusal +
+    deletion (tombstones, free-slot reuse, online compaction).
 
     Subclasses provide `cfg` (FoldConfig), `hnsw_cfg`, `state`, and a
     `_batches` level-seed counter; hooks cover any side containers that
@@ -45,8 +48,16 @@ class _HNSWLifecycle:
     _known_count: int = 0
     _dispatched_bound: int = 0
 
+    # -- deletion state (protocol DELETION CONTRACT) -------------------------
+    supports_deletion = True
+    _n_deleted = 0        # cumulative successful deletes (process lifetime)
+    _n_dead = 0           # live tombstones awaiting compact (host-exact)
+    _t_compact = 0.0      # cumulative compact() wall seconds
+    _free: list | None = None    # reclaimed slot ids (host free list)
+    _count_hw: int | None = None  # host mirror of state.count (slot logging)
+
     # -- overflow refusal ----------------------------------------------------
-    def _guard_capacity(self, keep) -> None:
+    def _guard_capacity(self, keep, offered: int = 0) -> None:
         """Refuse an insert that could overflow the fixed-capacity index.
 
         hnsw_insert_batch silently skips rows once full — acceptable for the
@@ -70,25 +81,34 @@ class _HNSWLifecycle:
         long before this bound can shrink below one batch) plus grow()
         re-deriving known/bound right after each re-allocation. The
         host-mask fast path covers direct/host-side callers.
+
+        `offered` is the number of reclaimed free slots handed to this
+        insert (hnsw_insert_batch free_slots): rows landing in a free slot
+        consume no fresh capacity, so only max(0, charge - offered) counts
+        against the HIGH-WATER bound (anchored on state.count, not the live
+        count — dead slots still occupy capacity until compact()).
         """
         cap = self.hnsw_cfg.capacity
         if isinstance(keep, np.ndarray):
             charge = int(keep.sum())           # host mask: exact, sync-free
         else:
             charge = int(keep.shape[0])        # device mask: conservative B
-        if self._known_count + self._dispatched_bound + charge <= cap:
-            self._dispatched_bound += charge
+        fresh = max(0, charge - offered)
+        if self._known_count + self._dispatched_bound + fresh <= cap:
+            self._dispatched_bound += fresh
             return
-        self._known_count = self.inserted          # host sync (rare)
+        self._known_count = int(self.state.count)  # host sync (rare)
         self._dispatched_bound = 0
         n_keep = int(np.asarray(keep).sum())
-        if self._known_count + n_keep > cap:
+        fresh = max(0, n_keep - offered)
+        if self._known_count + fresh > cap:
             raise RuntimeError(
                 f"HNSW index full: {self._known_count} of {cap} slots used "
-                f"and the batch admits {n_keep} more; call grow() (or run "
+                f"and the batch admits {fresh} beyond the free list; call "
+                f"grow() — or compact() if tombstones are pending — (or run "
                 f"under the service's IndexManager growth watermark) before "
                 f"inserting — refusing to silently drop admitted docs")
-        self._dispatched_bound = n_keep
+        self._dispatched_bound = fresh
 
     # -- search reuse --------------------------------------------------------
     def _seeds_from(self, search_ids):
@@ -102,6 +122,119 @@ class _HNSWLifecycle:
                 or not getattr(self.cfg, "reuse_search", True)):
             return None
         return jnp.asarray(search_ids, jnp.int32)
+
+    # -- occupancy -----------------------------------------------------------
+    @property
+    def inserted(self) -> int:
+        """LIVE document count: admitted - deleted (host sync: reads a
+        device reduction). Capacity accounting (growth watermark, pipeline
+        occupancy) therefore sees reclaimed space; the overflow guard keeps
+        its own HIGH-WATER anchor because dead slots still hold capacity
+        until compact() free-lists them."""
+        return int(jnp.sum((self.state.node_level >= 0)
+                           & ~self.state.dead, dtype=jnp.int32))
+
+    # -- deletion / compaction (protocol DELETION CONTRACT) ------------------
+    @property
+    def deleted(self) -> int:
+        return self._n_deleted
+
+    @property
+    def dead_fraction(self) -> float:
+        # host-exact tombstone counter: no device sync (polled every batch)
+        return self._n_dead / max(self.hnsw_cfg.capacity, 1)
+
+    def delete(self, ids) -> int:
+        """Tombstone slot ids (idempotent; see protocol.py). The device
+        delete is O(D); slots become reusable only after compact()."""
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        ids = ids[(ids >= 0) & (ids < self.hnsw_cfg.capacity)]
+        if len(ids) == 0:
+            return 0
+        # pad to the next power of two for stable compiled shapes
+        D = 1 << int(len(ids) - 1).bit_length() if len(ids) > 1 else 1
+        pad = np.full(D, -1, np.int64)
+        pad[:len(ids)] = ids
+        self.state, n_dev = hnsw_delete(self.hnsw_cfg, self.state,
+                                        jnp.asarray(pad, jnp.int32))
+        n = int(n_dev)                          # host sync
+        self._n_deleted += n
+        self._n_dead += n
+        return n
+
+    def compact(self) -> dict:
+        """Repair adjacency around tombstones, unlink them, and re-derive
+        the host free list from the device state (host sync — callers
+        schedule this off the hot path, e.g. repro.lifecycle's watermark)."""
+        t0 = time.perf_counter()
+        self.state, n_dev = hnsw_compact(self.hnsw_cfg, self.state)
+        reclaimed = int(n_dev)
+        node_level = np.asarray(self.state.node_level)
+        count = int(self.state.count)
+        # every unlinked slot below the high-water mark is reusable —
+        # including any previously popped-but-unconsumed free slots
+        self._free = [int(i) for i in np.flatnonzero(node_level[:count] < 0)]
+        self._n_dead = 0
+        self._count_hw = count
+        self._known_count = count               # re-anchor overflow guard
+        self._dispatched_bound = 0
+        self._t_compact += time.perf_counter() - t0
+        return {"reclaimed": reclaimed, "free": len(self._free),
+                "t_compact": self._t_compact}
+
+    def _prepare_slots(self, keep, B: int):
+        """Overflow guard + free-list pop for one insert.
+
+        Guards FIRST (a refusal must not leak free slots), then pops up to
+        B reclaimed slots for the device to consume before fresh capacity.
+        Popped-but-unconsumed slots (fewer kept rows than offered frees)
+        are temporarily orphaned — the next compact() re-derives the free
+        list from the device state and recovers them. Returns
+        (free_dev (B,) int32 | None, free_host list)."""
+        free = self._free if self._free else []
+        offered = min(B, len(free))
+        self._guard_capacity(keep, offered=offered)
+        if offered == 0:
+            return None, []
+        take, self._free = free[:offered], free[offered:]
+        pad = np.full(B, -1, np.int32)
+        pad[:offered] = take
+        return jnp.asarray(pad), take
+
+    def _log_slots(self, keep, free_host):
+        """Host mirror of the device slot assignment for one insert: the
+        j-th kept row lands in free_host[j] while frees last, then in
+        consecutive fresh slots from the pre-insert high-water count.
+        Returns (order, slots): kept-row indices and their slot ids.
+
+        Host-syncs `keep`; the count mirror syncs once (first logged
+        insert / after restore or compact) and is advanced host-side."""
+        order = np.flatnonzero(np.asarray(keep))
+        if self._count_hw is None:
+            self._count_hw = int(self.state.count)      # one-time sync
+        t = min(len(order), len(free_host))
+        slots = np.concatenate([
+            np.asarray(free_host[:t], np.int64),
+            self._count_hw + np.arange(len(order) - t, dtype=np.int64),
+        ]).astype(np.int32)
+        self._count_hw += len(order) - t
+        return order, slots
+
+    def _record_insert(self, sig, keep, free_host) -> None:
+        """Slot-dependent host bookkeeping for one insert: the exact-verify
+        sig store scatter and the track_slots log. No-op (and sync-free)
+        when neither is active."""
+        sig_store = getattr(self, "_sig_store", None)
+        if sig_store is None and not self.track_slots:
+            self._count_hw = None       # host count mirror goes stale
+            return
+        order, slots = self._log_slots(keep, free_host)
+        if sig_store is not None:
+            sig_store[slots] = np.asarray(sig.sigs)[order]
+        if self.track_slots:
+            q = list(getattr(self, "_slots_q", []))
+            q.append(slots)
+            self._slots_q = q
 
     # -- hooks ---------------------------------------------------------------
     def _after_grow(self, new_capacity: int) -> None:
@@ -129,8 +262,9 @@ class _HNSWLifecycle:
         self._after_grow(new_capacity)
         # growth already pays a recompile, so one host sync is cheap here:
         # re-derive the sync-free occupancy bound instead of carrying the
-        # accumulated over-charges into the new capacity window
-        self._known_count = self.inserted
+        # accumulated over-charges into the new capacity window (high-water
+        # anchor: dead slots occupy capacity until compact)
+        self._known_count = int(self.state.count)
         self._dispatched_bound = 0
 
     def save(self, ckpt_dir: str, step: int, async_write: bool = False):
@@ -173,9 +307,21 @@ class _HNSWLifecycle:
         self._take_extra(got)
         if target > cap:
             self.grow(target)
+        # re-derive ALL host-side deletion state from the restored device
+        # arrays: tombstones and free-listed slots round-trip through the
+        # checkpoint (they live in HNSWState), only the host mirrors need
+        # rebuilding. Cumulative `deleted` is not persisted — it restarts
+        # at the restored tombstone count.
+        node_level = np.asarray(self.state.node_level)
+        count = int(self.state.count)
+        self._free = [int(i) for i in np.flatnonzero(node_level[:count] < 0)]
+        self._n_dead = int(np.asarray(self.state.dead).sum())
+        self._n_deleted = self._n_dead
+        self._count_hw = count
+        self._slots_q = []
         # re-anchor the overflow guard's sync-free bound on the restored
-        # occupancy (it must stay an UPPER bound of the true count)
-        self._known_count = self.inserted
+        # high-water mark (it must stay an UPPER bound of the true count)
+        self._known_count = count
         self._dispatched_bound = 0
         return step
 
@@ -222,11 +368,6 @@ class HNSWBitmapBackend(_HNSWLifecycle):
     def capacity(self) -> int:
         return self.hnsw_cfg.capacity
 
-    @property
-    def inserted(self) -> int:
-        """Admitted-document count (host sync: reads the device scalar)."""
-        return int(self.state.count)
-
     # -- protocol: steps ② ③ ⑤ ----------------------------------------------
     def batch_sim(self, sig: SigBatch):
         cached = self.cfg.cached
@@ -253,19 +394,15 @@ class HNSWBitmapBackend(_HNSWLifecycle):
             B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
         self._batches += 1
         # refuse BEFORE any state mutation: once past the guard, every keep
-        # row is guaranteed a slot, so the sig-store append below stays in
+        # row is guaranteed a slot, so the sig-store scatter below stays in
         # lockstep with the device insert (no desync on partial inserts)
-        self._guard_capacity(keep)
-        if self._sig_store is not None:
-            # host-side store append must know the pre-insert count (sync)
-            start = self.inserted
-            order = np.flatnonzero(np.asarray(keep))
-            self._sig_store[start:start + len(order)] = \
-                np.asarray(sig.sigs)[order]
+        free_dev, free_host = self._prepare_slots(keep, B)
+        self._record_insert(sig, keep, free_host)
         self.state, _ = hnsw_insert_batch(self.hnsw_cfg, self.state,
                                           sig.bitmaps, sig.pcs, levels,
                                           jnp.asarray(keep),
-                                          seed_ids=self._seeds_from(search_ids))
+                                          seed_ids=self._seeds_from(search_ids),
+                                          free_slots=free_dev)
         return self.state.count     # timing handle (no sync implied)
 
     # -- lifecycle hooks (exact-verify signature store tracks capacity) ------
@@ -292,11 +429,12 @@ class HNSWBitmapBackend(_HNSWLifecycle):
 
     # -- protocol: introspection ---------------------------------------------
     def stats_schema(self) -> tuple[str, ...]:
-        return ("count", "capacity", "batches")
+        return ("count", "capacity", "batches", "deleted", "dead", "free")
 
     def stats(self) -> dict:
         return {"count": self.inserted, "capacity": self.capacity,
-                "batches": self._batches}
+                "batches": self._batches, "deleted": self._n_deleted,
+                "dead": self._n_dead, "free": len(self._free or [])}
 
 
 class RawHNSWBackend(_HNSWLifecycle):
@@ -336,10 +474,6 @@ class RawHNSWBackend(_HNSWLifecycle):
     def capacity(self) -> int:
         return self.hnsw_cfg.capacity
 
-    @property
-    def inserted(self) -> int:
-        return int(self.state.count)
-
     def batch_sim(self, sig: SigBatch):
         from repro.core.bitmap import pairwise_hamming, pairwise_minhash_jaccard
         pair = (pairwise_minhash_jaccard if self.metric == "minhash_jaccard"
@@ -354,20 +488,23 @@ class RawHNSWBackend(_HNSWLifecycle):
         levels = jnp.asarray(sample_levels(
             B, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
         self._batches += 1
-        self._guard_capacity(keep)
+        free_dev, free_host = self._prepare_slots(keep, B)
+        self._record_insert(sig, keep, free_host)
         pcs = jnp.zeros(B, jnp.int32)          # unused by raw metrics
         self.state, _ = hnsw_insert_batch(self.hnsw_cfg, self.state,
                                           sig.sigs, pcs, levels,
                                           jnp.asarray(keep),
-                                          seed_ids=self._seeds_from(search_ids))
+                                          seed_ids=self._seeds_from(search_ids),
+                                          free_slots=free_dev)
         return self.state.count     # timing handle (no sync implied)
 
     def stats_schema(self) -> tuple[str, ...]:
-        return ("count", "capacity", "metric")
+        return ("count", "capacity", "metric", "deleted", "dead", "free")
 
     def stats(self) -> dict:
         return {"count": self.inserted, "capacity": self.capacity,
-                "metric": self.metric}
+                "metric": self.metric, "deleted": self._n_deleted,
+                "dead": self._n_dead, "free": len(self._free or [])}
 
 
 @register("hnsw")

@@ -33,17 +33,23 @@ import numpy as np
 from repro.baselines.base import band_keys, pick_bands
 from repro.core.bitmap import pairwise_minhash_jaccard
 from repro.core.dedup import FoldConfig
-from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec
+from repro.index.protocol import BATCH_FIRST, DedupBackend, SigBatch, SigSpec
 from repro.index.registry import register
 
 __all__ = ["DPKBackend", "FlatLSHBackend"]
 
 
-class _BandedLSHBase:
+class _BandedLSHBase(DedupBackend):
     """Shared store/bucket machinery: (capacity, H) signature rows plus
-    (capacity, bands) uint64 band keys and a key->row bucket map."""
+    (capacity, bands) uint64 band keys and a key->row bucket map.
+
+    Row allocation goes through `_alloc_rows` so subclasses can layer a
+    free-list on top (FlatLSH deletion); `_free_mask` is None for backends
+    without deletion (DPK — a rebuilt-every-search bucket map has no stable
+    rows to free, mirroring how a Bloom-style filter cannot un-insert)."""
 
     order = BATCH_FIRST
+    _free_mask: np.ndarray | None = None
 
     def __init__(self, cfg: FoldConfig):
         self.cfg = cfg
@@ -87,18 +93,32 @@ class _BandedLSHBase:
         # bucket insertion re-derives everything from the stashed band keys
         assert self._qkeys is not None, "insert() before search()"
         new_idx = np.flatnonzero(np.asarray(keep))
-        if self.n + len(new_idx) > self.capacity:
-            raise RuntimeError(
-                f"{self.name} store full: {self.n} of {self.capacity} rows "
-                f"used and the batch admits {len(new_idx)} more; call "
-                f"grow() (or run under the service's IndexManager growth "
-                f"watermark) — refusing to silently drop admitted docs")
-        rows = np.arange(self.n, self.n + len(new_idx))
+        rows = self._alloc_rows(len(new_idx))
         self.store[rows] = np.asarray(sig.sigs)[new_idx]
         self.keys[rows] = self._qkeys[new_idx]
         self._bucket_new(rows, new_idx)
-        self.n += len(new_idx)
+        if self.track_slots:
+            q = list(getattr(self, "_slots_q", []))
+            q.append(rows.astype(np.int32))
+            self._slots_q = q
         self._qkeys = None
+
+    def _check_room(self, fresh: int) -> None:
+        if self.n + fresh > self.capacity:
+            raise RuntimeError(
+                f"{self.name} store full: {self.n} of {self.capacity} rows "
+                f"used and the batch admits {fresh} beyond the free list; "
+                f"call grow() (or run under the service's IndexManager "
+                f"growth watermark) — refusing to silently drop admitted "
+                f"docs")
+
+    def _alloc_rows(self, m: int) -> np.ndarray:
+        """Allocate m store rows (fresh only; FlatLSH layers free-list
+        reuse on top). Raises before any mutation on overflow."""
+        self._check_room(m)
+        rows = np.arange(self.n, self.n + m, dtype=np.int64)
+        self.n += m
+        return rows
 
     def _bucket_new(self, rows: np.ndarray, new_idx: np.ndarray) -> None:
         raise NotImplementedError
@@ -113,11 +133,16 @@ class _BandedLSHBase:
             [self.store, np.zeros((pad, self.cfg.num_hashes), np.uint32)])
         self.keys = np.concatenate(
             [self.keys, np.zeros((pad, self.bands), np.uint64)])
+        if self._free_mask is not None:
+            self._free_mask = np.concatenate(
+                [self._free_mask, np.zeros(pad, bool)])
 
     def save(self, ckpt_dir: str, step: int, async_write: bool = False):
         from repro.train import checkpoint as ckpt
         tree = {"store": self.store, "keys": self.keys,
                 "n": np.int64(self.n)}
+        if self._free_mask is not None:       # deletion state round-trips
+            tree["free_mask"] = self._free_mask.astype(np.uint8)
         writer = ckpt.save_async if async_write else ckpt.save
         writer(ckpt_dir, step, tree, extra={"capacity": self.capacity})
 
@@ -133,18 +158,28 @@ class _BandedLSHBase:
         tmpl = {"store": np.zeros((cap, self.cfg.num_hashes), np.uint32),
                 "keys": np.zeros((cap, self.bands), np.uint64),
                 "n": np.int64(0)}
+        if self._free_mask is not None:
+            tmpl["free_mask"] = np.zeros(cap, np.uint8)
         got = ckpt.restore(ckpt_dir, step, tmpl, device=False)
         self.store, self.keys = got["store"], got["keys"]
         self.n = int(got["n"])
+        if self._free_mask is not None:
+            self._take_free(np.asarray(got["free_mask"], bool))
         self.buckets = defaultdict(list)
         self._rebucket()
         if target > cap:
             self.grow(target)
         return step
 
+    def _take_free(self, mask: np.ndarray) -> None:
+        raise NotImplementedError      # only deletion subclasses restore it
+
     def _rebucket(self) -> None:
-        """Rebuild the bucket map from the persisted band keys."""
+        """Rebuild the bucket map from the persisted band keys (free-listed
+        rows stay unbucketed — a restored index never resurrects them)."""
         for i in range(self.n):
+            if self._free_mask is not None and self._free_mask[i]:
+                continue
             for k in self.keys[i]:
                 self.buckets[int(k)].append(i)
 
@@ -152,7 +187,7 @@ class _BandedLSHBase:
         return ("count", "capacity", "buckets")
 
     def stats(self) -> dict:
-        return {"count": self.n, "capacity": self.capacity,
+        return {"count": self.inserted, "capacity": self.capacity,
                 "buckets": len(self.buckets)}
 
 
@@ -194,10 +229,67 @@ class DPKBackend(_BandedLSHBase):
 
 class FlatLSHBackend(_BandedLSHBase):
     name = "flat_lsh"
+    supports_deletion = True
 
     def __init__(self, cfg: FoldConfig, topk: int = 4):
         super().__init__(cfg)
         self.topk = topk
+        self._free: list[int] = []      # deleted rows < n, reusable
+        self._free_mask = np.zeros(cfg.capacity, bool)
+        self._n_deleted = 0
+
+    @property
+    def inserted(self) -> int:
+        return self.n - len(self._free)
+
+    @property
+    def deleted(self) -> int:
+        return self._n_deleted
+
+    def delete(self, ids) -> int:
+        """Eager deletion: pull the rows out of their band buckets (they
+        can never be retrieved again) and free-list them for reuse."""
+        ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
+        ids = ids[(ids >= 0) & (ids < self.n)]
+        ids = ids[~self._free_mask[ids]]
+        if len(ids) == 0:
+            return 0
+        for r in ids:
+            r = int(r)
+            for k in self.keys[r]:
+                b = self.buckets.get(int(k))
+                if b is not None and r in b:
+                    b.remove(r)
+        self._free_mask[ids] = True
+        self._free = sorted(self._free + [int(i) for i in ids])
+        self._n_deleted += len(ids)
+        return len(ids)
+
+    def _alloc_rows(self, m: int) -> np.ndarray:
+        t = min(m, len(self._free))
+        self._check_room(m - t)
+        rows = np.concatenate(
+            [np.asarray(self._free[:t], np.int64),
+             np.arange(self.n, self.n + m - t, dtype=np.int64)])
+        self._free = self._free[t:]
+        self._free_mask[rows] = False
+        self.n += m - t
+        return rows
+
+    def _take_free(self, mask: np.ndarray) -> None:
+        # cumulative `deleted` is not persisted; it restarts at the
+        # restored free count
+        self._free_mask = mask
+        self._free = [int(i) for i in np.flatnonzero(mask[:self.n])]
+        self._n_deleted = len(self._free)
+        self._slots_q = []
+
+    def stats_schema(self) -> tuple[str, ...]:
+        return ("count", "capacity", "buckets", "deleted", "free")
+
+    def stats(self) -> dict:
+        return {**super().stats(), "deleted": self._n_deleted,
+                "free": len(self._free)}
 
     def search(self, sig: SigBatch):
         sigs_np = np.asarray(sig.sigs)

@@ -25,7 +25,8 @@ from collections import Counter, defaultdict
 import numpy as np
 
 from repro.core.dedup import FoldConfig
-from repro.index.protocol import INDEX_FIRST, SigBatch, SigSpec
+from repro.index.protocol import (INDEX_FIRST, DedupBackend, SigBatch,
+                                  SigSpec)
 from repro.index.registry import register
 
 __all__ = ["PrefixFilterBackend"]
@@ -33,7 +34,7 @@ __all__ = ["PrefixFilterBackend"]
 _PAD = 0xFFFFFFFF     # shingle_hashes padding sentinel
 
 
-class PrefixFilterBackend:
+class PrefixFilterBackend(DedupBackend):
     name = "prefix_filter"
     order = INDEX_FIRST
 

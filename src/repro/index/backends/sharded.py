@@ -32,17 +32,20 @@ import numpy as np
 from repro.core.dedup import FoldConfig, bitmap_tau
 from repro.core.hnsw import sample_levels
 from repro.core.sharded import make_sharded_dedup_step, sharded_init
-from repro.index.protocol import BATCH_FIRST, SigBatch, SigSpec, StepResult
+from repro.index.protocol import (BATCH_FIRST, DedupBackend, SigBatch,
+                                  SigSpec, StepResult)
 from repro.index.registry import register
 
 __all__ = ["ShardedDedupBackend"]
 
 
-class ShardedDedupBackend:
+class ShardedDedupBackend(DedupBackend):
     name = "hnsw_sharded"
     order = BATCH_FIRST      # nominal; the fused step owns the ordering
     supports_growth = False      # per-shard capacity is fixed at init
     supports_snapshots = False   # sharded state has no save/restore yet
+    # supports_deletion stays False: tombstones would have to thread through
+    # the fused shard_map step; inherits the protocol's raising delete()
 
     def __init__(self, cfg: FoldConfig, shards: int | None = None,
                  mesh=None, axis: str = "data"):

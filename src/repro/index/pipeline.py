@@ -117,6 +117,30 @@ class DedupPipeline:
         self.backend.grow(new_capacity)
         return self
 
+    # deletion lifecycle (protocol DELETION CONTRACT; raises
+    # NotImplementedError for backends with supports_deletion=False).
+    # getattr defaults keep pre-contract structural backends working: they
+    # read as deletion-free rather than AttributeError-ing.
+    @property
+    def deleted(self) -> int:
+        return getattr(self.backend, "deleted", 0)
+
+    @property
+    def dead_fraction(self) -> float:
+        return getattr(self.backend, "dead_fraction", 0.0)
+
+    def delete(self, ids) -> int:
+        fn = getattr(self.backend, "delete", None)
+        if fn is None:
+            raise NotImplementedError(
+                f"backend {self.backend.name!r} does not support deletion "
+                f"(supports_deletion=False)")
+        return fn(ids)
+
+    def compact(self) -> dict:
+        fn = getattr(self.backend, "compact", None)
+        return fn() if fn is not None else {"reclaimed": 0}
+
     def save(self, ckpt_dir: str, step: int, async_write: bool = False):
         self.backend.save(ckpt_dir, step, async_write=async_write)
 

@@ -154,13 +154,65 @@ class DedupBackend(Protocol):
           Replace the sim-matrix greedy sweep with a backend-native one
           (e.g. lazy host-side set comparisons). Only consulted for
           INDEX_FIRST backends, with eligible = ~index_dup ∧ valid.
+
+    Capability flags (class attributes with defaults — subclass DedupBackend
+    to inherit them, or define them yourself on a purely structural backend):
+
       supports_growth / supports_snapshots: bool (default True)
           Declare a lifecycle hole: the serving layer skips its growth
           watermark / snapshot rotation (and rejects snapshot configs)
           instead of tripping over a raising grow()/save().
+      supports_deletion: bool (default False)
+          The backend implements the DELETION CONTRACT below.
+      track_slots: bool (default False)
+          Opt-in slot logging: when True, every insert() appends the slot
+          ids it assigned to admitted rows (admission order) to an internal
+          queue that pop_slot_log() drains. repro.lifecycle sets this to
+          map doc insertion order onto index slots for TTL / LRU eviction.
+
+    DELETION CONTRACT (supports_deletion backends; mirrors the overflow
+    contract in spirit — verdicts must never lie about index contents):
+
+      delete(ids) -> int
+          Remove the given slot ids from future search verdicts. ids is a
+          1-D int array of slot ids as returned by search()/pop_slot_log();
+          unknown, out-of-range, negative, duplicate, and already-deleted
+          ids are IGNORED (idempotent). Returns the number of ids actually
+          newly deleted. After delete(ids) returns, no search() may report
+          a deleted id as a neighbor — a resubmitted copy of a deleted doc
+          must be ADMITTED again (delete-then-reinsert verdict correctness).
+          `inserted` counts LIVE docs only (admitted - deleted), so the
+          serving growth watermark and DedupPipeline occupancy account
+          reclaimed space. Backends that do NOT support deletion inherit a
+          delete() that raises NotImplementedError naming the backend.
+      deleted: int (property, default 0)
+          Cumulative successfully-deleted count (this process lifetime).
+      dead_fraction: float (property, default 0.0)
+          Fraction of capacity occupied by deleted-but-unreclaimed slots
+          (tombstones awaiting compact()); 0.0 for backends that reclaim
+          eagerly. MUST be host-cheap (no device sync) — the lifecycle
+          manager polls it every batch.
+      compact() -> dict
+          Reclaim tombstoned slots (graph repair + free-listing for the
+          HNSW backends; a no-op {"reclaimed": 0} default otherwise).
+          May host-sync; callers schedule it off the hot path.
+      pop_slot_log(n=None) -> list[np.ndarray]
+          Drain up to n (None = all) pending per-insert slot logs, oldest
+          first (only populated while track_slots is True).
+
+    save/restore MUST round-trip deletion state: tombstones and free lists
+    survive a snapshot, so a restored index neither resurrects deleted docs
+    nor forgets reusable slots.
     """
     name: str
     order: str
+
+    # capability flags — see the docstring; explicit subclasses inherit
+    # these defaults, structural backends define their own
+    supports_growth: bool = True
+    supports_snapshots: bool = True
+    supports_deletion: bool = False
+    track_slots: bool = False
 
     @property
     def sig_spec(self) -> SigSpec: ...
@@ -183,3 +235,30 @@ class DedupBackend(Protocol):
     def restore(self, ckpt_dir: str, step: int | None = None) -> int: ...
     def stats_schema(self) -> tuple[str, ...]: ...
     def stats(self) -> dict: ...
+
+    # ---- deletion contract defaults (concrete: explicit subclasses that
+    # don't support deletion get a correct raising surface for free)
+    @property
+    def deleted(self) -> int:
+        return 0
+
+    @property
+    def dead_fraction(self) -> float:
+        return 0.0
+
+    def delete(self, ids) -> int:
+        raise NotImplementedError(
+            f"backend {getattr(self, 'name', type(self).__name__)!r} does "
+            f"not support deletion (supports_deletion=False)")
+
+    def compact(self) -> dict:
+        return {"reclaimed": 0}
+
+    def pop_slot_log(self, n: int | None = None) -> list:
+        q = getattr(self, "_slots_q", None)
+        if not q:
+            return []
+        n = len(q) if n is None else min(n, len(q))
+        out, rest = list(q[:n]), list(q[n:])
+        self._slots_q = rest
+        return out

@@ -294,7 +294,8 @@ def _lower_fold(mesh, shape_name: str, query_chunk: int = 0,
     state_abs = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((nshards,) + x.shape, x.dtype),
         jax.eval_shape(lambda: hnsw_init(cfg)))
-    state_sh = HNSWState(*((NamedSharding(mesh, P(axis)),) * 7))
+    state_sh = HNSWState(*((NamedSharding(mesh, P(axis)),)
+                           * len(HNSWState._fields)))
     bm = jax.ShapeDtypeStruct((B, 128), jnp.uint32)
     pc = jax.ShapeDtypeStruct((B,), jnp.int32)
     lv = jax.ShapeDtypeStruct((B,), jnp.int32)

@@ -1,0 +1,11 @@
+"""Document lifecycle: TTL expiry, LRU eviction, online compaction.
+
+The paper's premise is continuous ingestion over *evolving* datasets; this
+package makes "evolving" literal — documents leave the index as well as
+enter it. See `LifecycleManager` for the policy loop; the mechanism
+(tombstones, free-slot reuse, `compact`) lives in the DELETION CONTRACT of
+`repro.index.protocol.DedupBackend`.
+"""
+from repro.lifecycle.manager import LifecycleManager
+
+__all__ = ["LifecycleManager"]

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.dedup import FoldConfig
 from repro.index import make_pipeline
+from repro.lifecycle import LifecycleManager
 from repro.service.batcher import MicroBatcher
 from repro.service.executor import BatchOutcome, PipelinedExecutor
 from repro.service.index_manager import IndexManager
@@ -70,6 +71,14 @@ class ServiceConfig:
     snapshot_dir: str | None = None
     snapshot_every: int = 0          # batches between snapshots; 0 = off
     max_snapshots: int = 3
+    # document lifecycle (repro.lifecycle; requires a supports_deletion
+    # backend): ttl_steps expires a doc that many materialized batches
+    # after insertion (0 = off); max_live_docs evicts oldest-inserted docs
+    # beyond the ceiling (None = off); compact_watermark triggers index
+    # compaction once that fraction of capacity is tombstoned
+    ttl_steps: int = 0
+    max_live_docs: int | None = None
+    compact_watermark: float = 0.25
     # distribution: >1 selects the "hnsw_sharded" backend (requires that
     # many devices; fold.capacity is then per shard)
     shards: int = 1
@@ -110,12 +119,15 @@ class DedupService:
             opts.setdefault("shards", cfg.shards)
         self.pipeline = make_pipeline(backend_key, cfg=cfg.fold, **opts)
         be = self.pipeline.backend
-        if not getattr(be, "supports_snapshots", True) and (
+        # capability flags are defaulted class attributes on DedupBackend
+        # (every built-in subclasses it; structural third-party backends
+        # define their own — see protocol.py)
+        if not be.supports_snapshots and (
                 cfg.snapshot_dir or cfg.snapshot_every):
             raise ValueError(
                 f"snapshots are not supported by backend {be.name!r}; "
                 f"unset snapshot_dir/snapshot_every")
-        if getattr(be, "supports_growth", True):
+        if be.supports_growth:
             self.index_manager = IndexManager(
                 self.pipeline, grow_watermark=cfg.grow_watermark,
                 growth_factor=cfg.growth_factor,
@@ -125,6 +137,14 @@ class DedupService:
                 max_snapshots=cfg.max_snapshots)
         else:
             self.index_manager = None        # capacity is fixed at init
+        if cfg.ttl_steps or cfg.max_live_docs is not None:
+            # raises for supports_deletion=False backends
+            self.lifecycle = LifecycleManager(
+                self.pipeline, ttl_steps=cfg.ttl_steps,
+                max_live_docs=cfg.max_live_docs,
+                compact_watermark=cfg.compact_watermark)
+        else:
+            self.lifecycle = None            # documents never leave
         self.batcher = MicroBatcher(
             max_batch=cfg.max_batch, max_wait_ms=cfg.max_wait_ms,
             len_buckets=cfg.len_buckets, batch_buckets=cfg.batch_buckets,
@@ -232,6 +252,10 @@ class DedupService:
                 )
         if self.index_manager is not None:
             self.index_manager.after_batch()
+        if self.lifecycle is not None:
+            n = self.lifecycle.after_batch()
+            if n:
+                self.metrics.inc("docs_deleted", n)
 
     def results(self, ticket: Ticket) -> list[DocVerdict]:
         """Per-doc verdicts for a ticket, flushing if still in flight.
@@ -259,8 +283,14 @@ class DedupService:
                             if self.index_manager else 0),
             "snapshots": (self.index_manager.snapshots_taken
                           if self.index_manager else 0),
+            "n_deleted": self.pipeline.deleted,
+            "dead_fraction": self.pipeline.dead_fraction,
+            "t_compact": (self.lifecycle.t_compact_total
+                          if self.lifecycle else 0.0),
             "backend_stats": backend_stats,
         }
+        if self.lifecycle is not None:
+            snap["lifecycle"] = self.lifecycle.stats()
         snap["batching"] = {
             "compiled_shapes": sorted(self.batcher.emitted_shapes),
             "truncated_docs": self.batcher.truncated,

@@ -1,0 +1,275 @@
+"""Deletion, TTL & online compaction (repro.lifecycle + DELETION CONTRACT).
+
+Edge cases the protocol docstring promises: delete-then-reinsert stays
+verdict-correct, a fully tombstoned index returns no duplicates, snapshots
+round-trip tombstones and free lists, and the growth watermark never fires
+while reclaimed slots remain. Policy (TTL / LRU eviction / watermark
+compaction) is covered through DedupService end-to-end.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.dedup import FoldConfig
+from repro.data.corpus import DATASET_PRESETS, SyntheticCorpus
+from repro.index import make_pipeline
+
+TAU = 0.7
+CFG = FoldConfig(capacity=256, M=8, M0=16, ef_construction=32, ef_search=32,
+                 tau=TAU, threshold_space="minhash")
+
+
+def _batch(n=64, seed=0, dataset="lm1b"):
+    src = SyntheticCorpus(dataclasses.replace(DATASET_PRESETS[dataset],
+                                              seed=seed))
+    return src.next_batch(n)[:2]
+
+
+def _admitted_slots(pipe):
+    """Drain the slot log into one admitted-slot array."""
+    logs = pipe.backend.pop_slot_log()
+    return np.concatenate(logs) if logs else np.empty(0, np.int64)
+
+
+# ------------------------------------------------- delete then reinsert
+@pytest.mark.parametrize("key", ["hnsw", "flat_lsh", "brute"])
+def test_delete_then_reinsert_verdict_correct(key):
+    """DELETION CONTRACT: after delete(ids), resubmitting exactly those
+    documents readmits them — and ONLY them (live docs stay duplicates)."""
+    t, l = _batch(64, seed=1)
+    pipe = make_pipeline(key, cfg=CFG)
+    pipe.backend.track_slots = True
+    keep1, _ = pipe.process_batch(t, l)
+    keep1 = np.asarray(keep1)
+    slots = _admitted_slots(pipe)
+    n0 = pipe.inserted
+    assert len(slots) == keep1.sum() == n0 > 0
+
+    replay, _ = pipe.process_batch(t, l)
+    assert np.asarray(replay).sum() == 0        # everything is a dup
+
+    kill = slots[::2]                           # tombstone every other doc
+    assert pipe.delete(kill) == len(kill)
+    assert pipe.deleted == len(kill)
+    assert pipe.inserted == n0 - len(kill)      # inserted counts LIVE docs
+    assert pipe.delete(kill) == 0               # idempotent
+
+    keep3 = np.asarray(pipe.process_batch(t, l)[0])
+    admitted_docs = np.flatnonzero(keep1)
+    expect = np.zeros_like(keep3)
+    expect[admitted_docs[::2]] = True           # the killed docs, no others
+    assert np.array_equal(keep3, expect)
+    assert pipe.inserted == n0
+
+
+def test_hnsw_raw_delete_readmits_deleted_docs():
+    """hnsw_raw verifies in the low-recall minhash_jaccard space, so the
+    only portable guarantee is one-sided: every deleted doc is readmitted
+    on resubmission (verdicts never claim a tombstoned neighbor)."""
+    t, l = _batch(64, seed=1)
+    pipe = make_pipeline("hnsw_raw", cfg=CFG)
+    pipe.backend.track_slots = True
+    keep1 = np.asarray(pipe.process_batch(t, l)[0])
+    slots = _admitted_slots(pipe)
+    kill = slots[::2]
+    pipe.delete(kill)
+    keep2 = np.asarray(pipe.process_batch(t, l)[0])
+    assert keep2[np.flatnonzero(keep1)[::2]].all()
+
+
+# ----------------------------------------------- slot reuse at capacity
+def test_hnsw_compact_reclaims_slots_insert_reuses_them():
+    """A full index stays full after delete() alone (tombstones still hold
+    their slots); compact() reclaims them, and reinsertion consumes the
+    free list without growing capacity."""
+    cfg = dataclasses.replace(CFG, capacity=64)
+    pipe = make_pipeline("hnsw", cfg=cfg)
+    t, l = _batch(64, seed=2)
+    sig = pipe.signatures(t, l)
+    pipe.backend.insert(sig, np.ones(64, bool))     # admission bypassed
+    assert pipe.inserted == 64
+
+    t2, l2 = _batch(16, seed=3)
+    sig2 = pipe.signatures(t2, l2)
+    with pytest.raises(RuntimeError, match="full|grow"):
+        pipe.backend.insert(sig2, np.ones(16, bool))
+
+    pipe.delete(np.arange(16))
+    with pytest.raises(RuntimeError, match="full|grow"):
+        pipe.backend.insert(sig2, np.ones(16, bool))    # dead ≠ free yet
+
+    info = pipe.compact()
+    assert info["reclaimed"] == 16
+    pipe.backend.insert(sig2, np.ones(16, bool))        # reuses freed slots
+    assert pipe.inserted == 64 and pipe.capacity == 64
+    # the reinserted docs are retrievable from their recycled slots
+    ids, sims = pipe.backend.search(sig2)
+    assert (np.asarray(sims)[:, 0] >= TAU).all()
+
+
+def test_brute_delete_frees_slots_eagerly():
+    """The flat store has no graph to repair: delete() itself returns the
+    rows to the free list (dead_fraction stays 0; compact is a no-op)."""
+    cfg = dataclasses.replace(CFG, capacity=64)
+    pipe = make_pipeline("brute", cfg=cfg)
+    t, l = _batch(64, seed=2)
+    sig = pipe.signatures(t, l)
+    pipe.backend.insert(sig, np.ones(64, bool))
+    pipe.delete(np.arange(16))
+    assert pipe.dead_fraction == 0.0
+    t2, l2 = _batch(16, seed=3)
+    pipe.backend.insert(pipe.signatures(t2, l2), np.ones(16, bool))
+    assert pipe.inserted == 64 and pipe.capacity == 64
+
+
+# --------------------------------------------------- fully tombstoned
+@pytest.mark.parametrize("key", ["hnsw", "brute", "flat_lsh"])
+def test_fully_tombstoned_index_finds_nothing(key):
+    """Deleting every document leaves an index that reports no duplicates
+    (no ghost matches against tombstones)."""
+    t, l = _batch(48, seed=4)
+    pipe = make_pipeline(key, cfg=CFG)
+    pipe.backend.track_slots = True
+    keep1 = np.asarray(pipe.process_batch(t, l)[0])
+    pipe.delete(_admitted_slots(pipe))
+    assert pipe.inserted == 0
+    keep2 = np.asarray(pipe.process_batch(t, l)[0])
+    assert np.array_equal(keep2, keep1)     # same verdicts as an empty index
+
+
+def test_hnsw_fully_tombstoned_search_returns_minus_one():
+    cfg = dataclasses.replace(CFG, capacity=64)
+    pipe = make_pipeline("hnsw", cfg=cfg)
+    t, l = _batch(32, seed=5)
+    sig = pipe.signatures(t, l)
+    pipe.backend.insert(sig, np.ones(32, bool))
+    pipe.delete(np.arange(32))
+    ids, _ = pipe.backend.search(sig)
+    assert (np.asarray(ids) == -1).all()
+
+
+# ------------------------------------------------- snapshot round-trip
+@pytest.mark.parametrize("key", ["hnsw", "brute", "flat_lsh"])
+def test_save_restore_preserves_tombstones_and_frees(tmp_path, key):
+    """DELETION CONTRACT: save→restore round-trips deletion state — the
+    restored index readmits exactly the deleted docs and reuses their
+    slots without growing."""
+    t, l = _batch(64, seed=6)
+    pipe = make_pipeline(key, cfg=CFG)
+    pipe.backend.track_slots = True
+    keep1 = np.asarray(pipe.process_batch(t, l)[0])
+    slots = _admitted_slots(pipe)
+    kill = slots[::2]
+    pipe.delete(kill)
+    pipe.save(str(tmp_path), step=1)
+
+    pipe2 = make_pipeline(key, cfg=CFG)
+    assert pipe2.restore(str(tmp_path), 1) == 1
+    assert pipe2.deleted == len(kill)
+    assert pipe2.inserted == pipe.inserted
+    keep2 = np.asarray(pipe2.process_batch(t, l)[0])
+    expect = np.zeros_like(keep2)
+    expect[np.flatnonzero(keep1)[::2]] = True
+    assert np.array_equal(keep2, expect)
+    assert pipe2.capacity == CFG.capacity
+
+
+# -------------------------------------------------- compaction repairs
+def test_compact_repairs_connectivity_and_entry():
+    """Deleting half the graph (including, possibly, the entry point) then
+    compacting keeps the survivors retrievable: self-retrieval recall stays
+    high and the entry point is live."""
+    cfg = dataclasses.replace(CFG, capacity=256)
+    pipe = make_pipeline("hnsw", cfg=cfg)
+    t, l = _batch(128, seed=7)
+    sig = pipe.signatures(t, l)
+    pipe.backend.insert(sig, np.ones(128, bool))
+    pipe.delete(np.arange(0, 128, 2))
+    info = pipe.compact()
+    assert info["reclaimed"] == 64
+    st = pipe.backend.state
+    entry = int(st.entry)
+    assert entry >= 0 and not bool(st.dead[entry])
+    assert int(st.node_level[entry]) >= 0
+    live = np.arange(1, 128, 2)
+    ids, _ = pipe.backend.search(pipe.signatures(t[live], l[live]))
+    hit = [e in row for e, row in zip(live, np.asarray(ids))]
+    assert np.mean(hit) >= 0.95
+
+
+# ------------------------------------------------ unsupported backends
+@pytest.mark.parametrize("key", ["dpk", "prefix_filter"])
+def test_delete_unsupported_raises_clearly(key):
+    pipe = make_pipeline(key, cfg=CFG)
+    assert not pipe.backend.supports_deletion
+    with pytest.raises(NotImplementedError, match="supports_deletion"):
+        pipe.delete([0])
+    # protocol defaults: deletion-free backends read as pristine
+    assert pipe.deleted == 0
+    assert pipe.dead_fraction == 0.0
+    assert pipe.compact() == {"reclaimed": 0}
+
+
+# ------------------------------------------------------- service layer
+def _service(**kw):
+    from repro.service import DedupService, ServiceConfig
+    fold = dataclasses.replace(CFG, capacity=kw.pop("capacity", 256))
+    return DedupService(ServiceConfig(
+        fold=fold, backend="hnsw", max_batch=32, max_wait_ms=0.0,
+        batch_buckets=(32,), max_len=64, stage_timer_every=0, **kw))
+
+
+def test_service_ttl_expires_and_watermark_never_fires():
+    """Steady-state TTL churn holds occupancy far below the growth
+    watermark: documents expire as fast as they arrive, compaction recycles
+    their slots, and the index never grows."""
+    svc = _service(ttl_steps=2, compact_watermark=0.125)
+    src = SyntheticCorpus(dataclasses.replace(DATASET_PRESETS["lm1b"],
+                                              seed=8, max_len=64))
+    for _ in range(20):
+        svc.submit(*src.next_batch(32)[:2])
+    svc.flush()
+    s = svc.stats()
+    assert s["index"]["grow_events"] == 0
+    assert s["index"]["capacity"] == 256
+    assert s["index"]["n_deleted"] > 0
+    assert s["lifecycle"]["n_expired"] == s["index"]["n_deleted"]
+    assert s["lifecycle"]["n_compactions"] > 0
+    assert s["index"]["t_compact"] > 0.0
+    # steady state: at most ttl_steps * batch docs are live
+    assert s["index"]["count"] <= 2 * 32
+    assert s["lifecycle"]["tracked_live"] == s["index"]["count"]
+
+
+def test_service_max_live_docs_evicts_oldest():
+    svc = _service(max_live_docs=64)
+    src = SyntheticCorpus(dataclasses.replace(DATASET_PRESETS["lm1b"],
+                                              seed=9, max_len=64))
+    for _ in range(10):
+        svc.submit(*src.next_batch(32)[:2])
+    svc.flush()
+    s = svc.stats()
+    assert s["lifecycle"]["n_evicted"] > 0
+    assert s["lifecycle"]["tracked_live"] <= 64
+    assert s["index"]["count"] <= 64
+    assert s["index"]["grow_events"] == 0
+
+
+def test_service_lifecycle_requires_deletion_backend():
+    from repro.service import DedupService, ServiceConfig
+    with pytest.raises(ValueError, match="deletion"):
+        DedupService(ServiceConfig(fold=CFG, backend="dpk", ttl_steps=2))
+
+
+def test_service_stats_without_lifecycle_are_inert():
+    svc = _service()
+    t, l = _batch(32, seed=10)
+    svc.submit(t, l)
+    svc.flush()
+    s = svc.stats()
+    assert svc.lifecycle is None
+    assert "lifecycle" not in s
+    assert s["index"]["n_deleted"] == 0
+    assert s["index"]["dead_fraction"] == 0.0
+    assert s["index"]["t_compact"] == 0.0
