@@ -1,0 +1,299 @@
+"""Open-loop SLO load harness: cluster vs single-process at equal load.
+
+The measurement layer for serving-architecture work. Unlike the
+closed-loop `service_throughput.py` (which submits the next batch only
+after the previous one finishes, so the system sets its own pace and
+queueing delay is invisible), this harness is OPEN-LOOP: request arrival
+times are drawn from a Poisson process up front, and every latency is
+measured from the request's SCHEDULED arrival — a system that falls
+behind accumulates queueing delay in its tail percentiles instead of
+silently shedding offered load. This is the difference between "how fast
+can it go" and "what does a user experience at a given traffic level",
+and it is the number every later scaling PR is judged against.
+
+Two arms at the SAME offered load and identical payload streams:
+
+  cluster  — 1 ClusterWriter + 2 in-process ReadReplicas (repro.cluster):
+             writes go through tenant routing (a `bulk` tenant with no
+             quota and a `greedy` tenant with a low QPS quota that MUST
+             draw Backpressure rejections), reads round-robin over the
+             replicas, auto-publish every few batches keeps them fresh.
+  single   — one DedupService; reads hit the writer's own pipeline
+             in-process (the pre-cluster architecture).
+
+Reported per arm: write p50/p99/p99.9 request latency, read latency,
+goodput vs offered docs/s, rejection counts, replica staleness, and a
+writer/replica verdict-parity check at equal epoch. Asserts (the CI
+smoke): zero lost tickets — every accepted doc id gets a verdict — p99
+present, and greedy-tenant rejections > 0 without touching bulk.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+VOCAB = 50_000
+L = 64          # tokens per doc
+W = 8           # docs per write request
+Q = 8           # docs per read request
+
+
+def _fold_cfg():
+    from repro.core.dedup import FoldConfig
+    return FoldConfig(capacity=4096, M=8, M0=16, ef_construction=16,
+                      ef_search=16, threshold_space="minhash",
+                      exact_filter=True, use_kernel=False)
+
+
+def _service_cfg(snapshot_dir):
+    from repro.service import ServiceConfig
+    return ServiceConfig(
+        fold=_fold_cfg(), max_batch=16, batch_buckets=(16,),
+        max_len=L, len_buckets=(L,), max_wait_ms=2.0,
+        stage_timer_every=0, snapshot_dir=snapshot_dir,
+        max_pending_docs=256, retry_after_s=0.02)
+
+
+def _poisson_times(rng, rate_hz: float, duration_s: float) -> list[float]:
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / rate_hz)
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def _schedule(rng, duration, write_rps, read_rps, warm):
+    """Merged arrival schedule: (t, kind, tenant, docs)."""
+    ev = []
+    for t in _poisson_times(rng, write_rps, duration):
+        tenant = "greedy" if rng.random() < 0.25 else "bulk"
+        ev.append((t, "write", tenant,
+                   rng.integers(0, VOCAB, (W, L)).astype(np.uint32)))
+    for t in _poisson_times(rng, read_rps, duration):
+        # half verbatim replays of the warm corpus (exact front-door
+        # territory), half fresh uniques (full search path)
+        idx = rng.integers(0, warm.shape[0], Q // 2)
+        docs = np.concatenate(
+            [warm[idx], rng.integers(0, VOCAB, (Q - Q // 2, L))
+             .astype(np.uint32)])
+        ev.append((t, "read", None, docs))
+    ev.sort(key=lambda e: e[0])
+    return ev
+
+
+def _install_done_hook(svc, clock_ref, done):
+    def hook(out):
+        now = time.perf_counter() - clock_ref[0]
+        mb = out.batch
+        for i in np.flatnonzero(mb.valid):
+            done[int(mb.doc_ids[i])] = now
+    svc.outcome_hooks.append(hook)
+
+
+def _drive(events, *, submit, query, poll, svc, done, clock_ref):
+    """Replay the schedule in real time; returns per-request records."""
+    from repro.service import Backpressure
+    writes = []                    # (sched_t, ticket)
+    reads = []                     # completion - sched latency (s)
+    rejected = {"bulk": 0, "greedy": 0, None: 0}
+    t0 = time.perf_counter()
+    clock_ref[0] = t0
+    next_poll = 0.0
+    for sched, kind, tenant, docs in events:
+        while True:
+            now = time.perf_counter() - t0
+            if now >= sched:
+                break
+            if now >= next_poll:
+                # pump the batching clock + replica refreshes, throttled so
+                # the wait loop doesn't hammer the manifest file
+                poll()
+                next_poll = now + 0.002
+            else:
+                time.sleep(min(sched - now, 5e-4))
+        if kind == "write":
+            now = time.perf_counter() - t0
+            try:
+                tk = submit(docs, tenant)
+            except Backpressure as e:
+                assert e.retry_after_s >= 0.0
+                rejected[tenant] += docs.shape[0]
+                continue
+            # exact-dup short-circuits resolve inside submit and never
+            # reach the outcome hook — stamp them now
+            for did in range(*tk):
+                if did not in done and svc.verdict_ready(did):
+                    done[did] = now
+            writes.append((sched, tk))
+        else:
+            query(docs)
+            reads.append((time.perf_counter() - t0) - sched)
+    return writes, reads, rejected
+
+
+def _lat_summary(values_s) -> dict:
+    from repro.service import LogHistogram
+    h = LogHistogram()
+    for v in values_s:
+        h.observe(v * 1e3)
+    return h.summary()
+
+
+def _finish_writes(writes, done):
+    """(latencies_s, n_lost): request latency = last doc verdict − sched."""
+    lat, lost = [], 0
+    for sched, tk in writes:
+        ts = [done.get(d) for d in range(*tk)]
+        if any(t is None for t in ts):
+            lost += sum(t is None for t in ts)
+            continue
+        lat.append(max(ts) - sched)
+    return lat, lost
+
+
+def _fmt(summ: dict, extra: str = "") -> str:
+    if summ.get("n", 0) == 0:
+        return "n=0"
+    s = (f"p50={summ['p50']:.1f}ms;p99={summ['p99']:.1f}ms;"
+         f"p999={summ['p999']:.1f}ms;n={summ['n']}")
+    return s + (";" + extra if extra else "")
+
+
+def run(quick: bool = False):
+    import shutil
+    import tempfile
+
+    from repro.cluster import ClusterConfig, DedupCluster, TenantSpec
+    from repro.service import DedupService
+
+    duration = 1.5 if quick else 6.0
+    write_rps = 10.0 if quick else 24.0      # requests/s, W docs each
+    read_rps = 10.0 if quick else 24.0
+    offered_docs = None  # filled below
+
+    rng = np.random.default_rng(7)
+    warm = rng.integers(0, VOCAB, (64, L)).astype(np.uint32)
+    warm_lens = np.full(warm.shape[0], L, np.int32)
+    events = _schedule(np.random.default_rng(11), duration,
+                       write_rps, read_rps, warm)
+    offered_docs = sum(e[3].shape[0] for e in events) / duration
+    rows = []
+
+    # ---------------------------------------------------------- cluster arm
+    snap = tempfile.mkdtemp(prefix="fold_load_")
+    try:
+        ccfg = ClusterConfig(
+            service=_service_cfg(snap), n_replicas=2, publish_every=8,
+            max_staleness_epochs=2,
+            tenants=(TenantSpec("bulk"),
+                     TenantSpec("greedy", qps=8.0, burst=8.0)))
+        cl = DedupCluster(ccfg)
+        # warmup OUTSIDE timing: compile the bucket shapes, seed the warm
+        # corpus, publish epoch 1, bring the replicas online. The read
+        # probe must contain FRESH docs — all-exact-hit queries skip the
+        # search entirely, leaving the read path's XLA compile to land on
+        # the first timed request otherwise.
+        cl.results(cl.submit(warm, warm_lens, tenant="bulk"))
+        cl.publish(flush=True)
+        cl.refresh_replicas()
+        probe0 = rng.integers(0, VOCAB, (Q, L)).astype(np.uint32)
+        for _ in range(1 + len(cl.replicas)):     # writer + every replica
+            cl.query(probe0, np.full(Q, L, np.int32))
+        cl.writer.query(probe0, np.full(Q, L, np.int32))
+
+        done: dict[int, float] = {}
+        clock_ref = [0.0]
+        _install_done_hook(cl.writer.service, clock_ref, done)
+        writes, reads, rejected = _drive(
+            events,
+            submit=lambda d, ten: cl.submit(
+                d, np.full(d.shape[0], L, np.int32), tenant=ten),
+            query=lambda d: cl.query(d, np.full(d.shape[0], L, np.int32)),
+            poll=cl.poll, svc=cl.writer.service, done=done,
+            clock_ref=clock_ref)
+        cl.flush()
+        wall = time.perf_counter() - clock_ref[0]
+        wlat, lost = _finish_writes(writes, done)
+        assert lost == 0, f"lost {lost} accepted docs (cluster arm)"
+        st = cl.stats()
+        ten = st["writer"]["cluster"]["tenants"]
+        assert ten["greedy"]["rejected_qps"] > 0, \
+            "greedy tenant drew no quota rejections — lower its qps"
+        assert ten["bulk"]["rejected_qps"] == 0
+        ws, rs = _lat_summary(wlat), _lat_summary(reads)
+        assert "p99" in ws and "p99" in rs, (ws, rs)
+        goodput = (len(wlat) * W) / wall
+        stale = st["router"]["latency_ms"].get("staleness_epochs", {})
+        repl = st["replicas"]
+        rows.append((
+            "load/cluster_write", round(ws["p50"] * 1e3, 1),
+            _fmt(ws, f"goodput={goodput:.0f}dps;offered={offered_docs:.0f}dps;"
+                 f"rej_qps={ten['greedy']['rejected_qps']};"
+                 f"rej_queue={ten['bulk']['rejected_queue'] + ten['greedy']['rejected_queue']}")))
+        rows.append((
+            "load/cluster_read", round(rs["p50"] * 1e3, 1),
+            _fmt(rs, f"staleness_mean={stale.get('mean', 0.0):.2f}ep;"
+                 f"staleness_max={stale.get('max', 0.0):.0f}ep;"
+                 f"fallbacks={st['router']['counters'].get('query_fallback_writer', 0)};"
+                 f"refreshes={sum(r['cluster']['refreshes'] for r in repl)}")))
+
+        # verdict parity at equal epoch: writer vs every replica
+        cl.publish(flush=True)
+        cl.refresh_replicas()
+        probe = np.concatenate(
+            [warm[:Q], rng.integers(0, VOCAB, (Q, L)).astype(np.uint32)])
+        plen = np.full(probe.shape[0], L, np.int32)
+        qw = cl.writer.query(probe, plen)
+        mismatch = 0
+        for r in cl.replicas:
+            qr = r.query(probe, plen)
+            if not (np.array_equal(qw.is_dup, qr.is_dup)
+                    and np.array_equal(qw.ids, qr.ids)
+                    and np.allclose(qw.sims, qr.sims)):
+                mismatch += 1
+        assert mismatch == 0, f"{mismatch} replicas disagree with writer"
+        rows.append(("load/verdict_parity", 0.0,
+                     f"replicas={len(cl.replicas)};mismatch=0;"
+                     f"epoch={cl.writer.epoch}"))
+    finally:
+        shutil.rmtree(snap, ignore_errors=True)
+
+    # ----------------------------------------------------- single-process arm
+    svc = DedupService(_service_cfg(None))
+    svc.results(svc.submit(warm, warm_lens))
+    svc.pipeline.query(rng.integers(0, VOCAB, (Q, L)).astype(np.uint32),
+                       np.full(Q, L, np.int32))
+    done2: dict[int, float] = {}
+    clock_ref2 = [0.0]
+    _install_done_hook(svc, clock_ref2, done2)
+
+    def _single_submit(d, _tenant):
+        return svc.submit(d, np.full(d.shape[0], L, np.int32))
+
+    writes2, reads2, rejected2 = _drive(
+        events, submit=_single_submit,
+        query=lambda d: svc.pipeline.query(
+            d, np.full(d.shape[0], L, np.int32)),
+        poll=svc.poll, svc=svc, done=done2, clock_ref=clock_ref2)
+    svc.flush()
+    wall2 = time.perf_counter() - clock_ref2[0]
+    wlat2, lost2 = _finish_writes(writes2, done2)
+    assert lost2 == 0, f"lost {lost2} accepted docs (single arm)"
+    ws2, rs2 = _lat_summary(wlat2), _lat_summary(reads2)
+    goodput2 = (len(wlat2) * W) / wall2
+    n_rej2 = sum(v for v in rejected2.values())
+    rows.append((
+        "load/single_write", round(ws2["p50"] * 1e3, 1) if ws2.get("n") else 0.0,
+        _fmt(ws2, f"goodput={goodput2:.0f}dps;offered={offered_docs:.0f}dps;"
+             f"rej_queue={n_rej2}")))
+    rows.append((
+        "load/single_read", round(rs2["p50"] * 1e3, 1) if rs2.get("n") else 0.0,
+        _fmt(rs2)))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(",".join(str(x) for x in row))

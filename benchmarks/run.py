@@ -24,7 +24,7 @@ import sys
 SECTIONS = ["table1_recall", "fig6_scaling", "fig7_breakdown", "fig8_ablation",
             "fig9_largescale", "table3_collisions", "appendix_hamming",
             "dist_scaling", "service_throughput", "search_mem", "insert_bench",
-            "roofline", "churn_bench"]
+            "roofline", "churn_bench", "load_harness"]
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,6 +1,12 @@
 """Service-mode steady-state throughput vs the naive per-batch loop, as the
 corpus grows (the paper's Fig. 6 axis, measured on the serving layer).
 
+CLOSED-LOOP (legacy): each arm submits the next chunk only after the
+previous one resolves, so this measures peak capacity and by construction
+cannot observe queueing delay or overload collapse. For SLO-shaped numbers
+(open-loop Poisson arrivals, latency from scheduled arrival, goodput vs
+offered load, backpressure/tenancy) use `benchmarks/load_harness.py`.
+
 Arms, over identical document streams:
 
   ragged (headline, 3 corpus sizes) — traffic arrives as request-sized

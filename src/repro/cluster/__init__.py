@@ -1,0 +1,30 @@
+"""repro.cluster — single-writer / N-reader replicated dedup serving.
+
+The million-user serving architecture on top of `repro.service`: one
+ClusterWriter owns admission, insertion, growth, and lifecycle exactly as
+DedupService always has; N ReadReplicas serve search-only "is this a
+dup?" queries from read-only indexes refreshed through the existing
+snapshot rotation plus an atomically-published manifest (monotone epoch).
+Multi-tenant namespaces add per-tenant QPS token buckets and live-doc
+budgets, and the ticket API gains bounded admission with explicit
+Backpressure (reject-with-retry-after) instead of unbounded queues.
+
+Everything is in-process and caller-driven (no threads) — the process
+boundary of a real deployment is the snapshot directory + manifest the
+replicas already poll, so the protocol is deployment-shaped even though
+the reference topology runs in one process. `benchmarks/load_harness.py`
+drives this topology open-loop (Poisson arrivals) for SLO numbers.
+"""
+from repro.cluster.manifest import (MANIFEST_NAME, ClusterManifest,  # noqa: F401
+                                    publish_manifest, read_manifest)
+from repro.cluster.replica import ReadReplica  # noqa: F401
+from repro.cluster.router import DedupCluster  # noqa: F401
+from repro.cluster.tenancy import TenantSpec, TokenBucket  # noqa: F401
+from repro.cluster.writer import (DEFAULT_TENANT, ClusterConfig,  # noqa: F401
+                                  ClusterWriter)
+from repro.service.batcher import Backpressure  # noqa: F401
+
+__all__ = ["ClusterManifest", "MANIFEST_NAME", "publish_manifest",
+           "read_manifest", "ReadReplica", "DedupCluster", "TenantSpec",
+           "TokenBucket", "ClusterConfig", "ClusterWriter",
+           "DEFAULT_TENANT", "Backpressure"]

@@ -83,6 +83,13 @@ class FoldConfig:
     # batched_insert is on; changes which (equivalent-recall) graph is
     # built, never which documents are admitted in a given batch.
     reuse_search: bool = True
+    # exact-dup short-circuit front-end (LSHBloom-style, arXiv 2411.04257):
+    # a content-hash set consulted before signature generation, so verbatim
+    # re-fetches never pay an HNSW search. Purely an admission fast path —
+    # identical documents have identical signatures, so the fuzzy pipeline
+    # reaches the same verdicts without it (just slower, and subject to ANN
+    # recall). Snapshotted alongside the index; losing the sidecar is safe.
+    exact_filter: bool = False
     # ablation arms (Fig. 8)
     use_kernel: bool = True              # 'SIMD' arm -> Pallas kernel path
     cached: bool = True                  # popcount-cache arm

@@ -20,13 +20,16 @@ ingestion all construct pipelines through this registry, so a new ~100-line
 backend immediately gets micro-batching, pipelined execution, capacity
 growth, and snapshot rotation for free.
 """
-from repro.index.pipeline import (DedupPipeline, greedy_leader,  # noqa: F401
-                                  greedy_leader_split)
+from repro.index.exact import ExactDupFilter, batch_hashes, doc_hash  # noqa: F401
+from repro.index.pipeline import (DedupPipeline, QueryResult,  # noqa: F401
+                                  greedy_leader, greedy_leader_split)
 from repro.index.protocol import (BATCH_FIRST, INDEX_FIRST,  # noqa: F401
                                   DedupBackend, SigBatch, SigSpec, StepResult)
-from repro.index.registry import available, make, make_pipeline, register  # noqa: F401
+from repro.index.registry import (accepted_opts, available, make,  # noqa: F401
+                                  make_pipeline, register, validate_opts)
 
 __all__ = ["DedupBackend", "SigBatch", "SigSpec", "StepResult",
-           "BATCH_FIRST", "INDEX_FIRST", "DedupPipeline", "greedy_leader",
-           "greedy_leader_split", "register", "make", "make_pipeline",
-           "available"]
+           "BATCH_FIRST", "INDEX_FIRST", "DedupPipeline", "QueryResult",
+           "greedy_leader", "greedy_leader_split", "register", "make",
+           "make_pipeline", "available", "accepted_opts", "validate_opts",
+           "ExactDupFilter", "doc_hash", "batch_hashes"]

@@ -1,0 +1,151 @@
+"""Exact-duplicate short-circuit front-end (LSHBloom-style, arXiv
+2411.04257).
+
+A compact content-hash set consulted *before* signature generation: the
+common case at crawl scale is the verbatim re-fetch, and it should never
+pay shingling, MinHash, or an HNSW search. The filter is purely an
+admission fast path — identical token streams produce identical
+signatures, so the fuzzy pipeline reaches the same verdict without it
+(just slower, and subject to ANN recall; the exact filter is if anything
+*more* faithful, since a beam search may miss an exact twin the hash set
+cannot).
+
+Correctness stance: losing filter state is SAFE (the fuzzy path backstops
+it), which is why the snapshot sidecar can be written independently of the
+backend's array checkpoint — a sidecar/step mismatch degrades to extra
+HNSW searches, never to a wrong verdict. Deletion is the one place the
+filter must be maintained (a deleted doc's hash must not keep vetoing its
+own re-admission): callers that evict docs drop the matching entries via
+`discard_refs`.
+
+Hashes are 64-bit blake2b digests of the raw uint32 token bytes (truncated
+to the declared length), so the filter is tokenizer-exact, order-exact,
+and independent of padding.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+
+import numpy as np
+
+__all__ = ["doc_hash", "batch_hashes", "ExactDupFilter"]
+
+_SIDECAR_FMT = "exact_%08d.npz"
+
+
+def doc_hash(tokens, length: int | None = None) -> int:
+    """64-bit content hash of one token sequence (uint32 little-endian)."""
+    t = np.ascontiguousarray(np.asarray(tokens, np.uint32).ravel())
+    if length is not None:
+        t = t[: int(length)]
+    d = hashlib.blake2b(t.tobytes(), digest_size=8).digest()
+    return int.from_bytes(d, "little")
+
+
+def batch_hashes(tokens, lengths=None) -> list[int]:
+    """Per-row content hashes for a (B, L) token batch."""
+    toks = np.asarray(tokens, np.uint32)
+    if lengths is None:
+        return [doc_hash(row) for row in toks]
+    lens = np.asarray(lengths, np.int64).ravel()
+    return [doc_hash(row, int(n)) for row, n in zip(toks, lens)]
+
+
+class ExactDupFilter:
+    """Content-hash set with first-wins reference ids and a snapshot sidecar.
+
+    hash → ref maps a content hash to the doc id that first admitted it
+    (ref = -1 when the admitter's id is unknown, e.g. the raw pipeline
+    path where docs have no service-level ids). The reverse map makes
+    `discard_refs` O(evicted) so lifecycle eviction stays off the hot path.
+    """
+
+    def __init__(self):
+        self._by_hash: dict[int, int] = {}
+        self._refs: dict[int, int] = {}   # ref doc id -> hash (refs >= 0)
+        self.hits = 0                     # counted by callers via record_hit
+
+    def __len__(self) -> int:
+        return len(self._by_hash)
+
+    def __contains__(self, h: int) -> bool:
+        return h in self._by_hash
+
+    def lookup(self, h: int) -> int | None:
+        """ref doc id for a known hash (may be -1), None if unknown.
+
+        Pure — callers that treat the hit as a served verdict bump
+        `self.hits` themselves (record_hit)."""
+        return self._by_hash.get(h)
+
+    def record_hit(self, n: int = 1) -> None:
+        self.hits += n
+
+    def add(self, h: int, ref: int = -1) -> bool:
+        """Register a hash (first admitter wins). Returns True if new."""
+        if h in self._by_hash:
+            return False
+        self._by_hash[h] = ref
+        if ref >= 0:
+            self._refs[ref] = h
+        return True
+
+    def discard_refs(self, doc_ids) -> int:
+        """Drop entries whose admitting doc was evicted/deleted, so a
+        resubmitted copy is re-admitted instead of vetoed by a ghost."""
+        n = 0
+        for ref in np.asarray(doc_ids, np.int64).ravel():
+            h = self._refs.pop(int(ref), None)
+            if h is not None and self._by_hash.get(h) == int(ref):
+                del self._by_hash[h]
+                n += 1
+        return n
+
+    # -- snapshot sidecar ---------------------------------------------------
+    def save(self, ckpt_dir: str, step: int) -> None:
+        """Write the sidecar atomically next to the backend's step dirs."""
+        os.makedirs(ckpt_dir, exist_ok=True)
+        hashes = np.fromiter(self._by_hash.keys(), np.uint64,
+                             len(self._by_hash))
+        refs = np.fromiter(self._by_hash.values(), np.int64,
+                           len(self._by_hash))
+        fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, hashes=hashes, refs=refs)
+            os.replace(tmp, os.path.join(ckpt_dir, _SIDECAR_FMT % step))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def load(self, ckpt_dir: str, step: int) -> bool:
+        """Restore from the step's sidecar; missing sidecar leaves the
+        filter EMPTY (safe: the fuzzy path backstops exact dups) and
+        returns False."""
+        path = os.path.join(ckpt_dir, _SIDECAR_FMT % step)
+        self._by_hash = {}
+        self._refs = {}
+        if not os.path.exists(path):
+            return False
+        with np.load(path) as z:
+            hashes, refs = z["hashes"], z["refs"]
+        self._by_hash = {int(h): int(r) for h, r in zip(hashes, refs)}
+        self._refs = {r: h for h, r in self._by_hash.items() if r >= 0}
+        return True
+
+    def prune_sidecars(self, ckpt_dir: str, keep_steps) -> None:
+        """Drop sidecars for rotated-away snapshot steps."""
+        keep = {_SIDECAR_FMT % s for s in keep_steps}
+        try:
+            names = os.listdir(ckpt_dir)
+        except FileNotFoundError:
+            return
+        for name in names:
+            if (name.startswith("exact_") and name.endswith(".npz")
+                    and name not in keep):
+                try:
+                    os.unlink(os.path.join(ckpt_dir, name))
+                except FileNotFoundError:
+                    pass

@@ -20,7 +20,7 @@ from __future__ import annotations
 import functools
 import inspect
 import time
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,23 @@ import numpy as np
 from repro.index.protocol import (BATCH_FIRST, INDEX_FIRST, SigBatch,
                                   StepResult)
 
-__all__ = ["DedupPipeline", "greedy_leader", "greedy_leader_split"]
+__all__ = ["DedupPipeline", "QueryResult", "greedy_leader",
+           "greedy_leader_split"]
+
+
+class QueryResult(NamedTuple):
+    """Read-only search verdicts (DedupPipeline.query — nothing inserted).
+
+    is_dup     (B,) bool  — some corpus doc matches at >= tau_index
+    ids        (B, k) int32 — retrieved neighbor ids (-1 = none; column 0
+                is the exact-match ref id for exact_hit rows)
+    sims       (B, k) f32 — similarities (1.0 in column 0 for exact hits)
+    exact_hit  (B,) bool  — verdict served by the exact-dup filter
+    """
+    is_dup: Any
+    ids: Any
+    sims: Any
+    exact_hit: Any
 
 
 @functools.partial(jax.jit, static_argnames=("tau",))
@@ -103,6 +119,14 @@ class DedupPipeline:
                                              .parameters)
         except (TypeError, ValueError):
             self._insert_takes_search_ids = False
+        # exact-dup short-circuit front-end (repro.index.exact): opt-in via
+        # the shared config's exact_filter flag; None when off. The filter
+        # is consulted by process_batch/query here and by the service's
+        # submit-time front door — same object, shared state.
+        self.exact = None
+        if getattr(getattr(backend, "cfg", None), "exact_filter", False):
+            from repro.index.exact import ExactDupFilter
+            self.exact = ExactDupFilter()
 
     # -- lifecycle (delegated) ----------------------------------------------
     @property
@@ -143,14 +167,23 @@ class DedupPipeline:
 
     def save(self, ckpt_dir: str, step: int, async_write: bool = False):
         self.backend.save(ckpt_dir, step, async_write=async_write)
+        if self.exact is not None:
+            # sidecar is host-cheap and loss-safe (the fuzzy path backstops
+            # exact dups), so it is written synchronously even when the
+            # backend's array checkpoint goes out async
+            self.exact.save(ckpt_dir, step)
 
     def restore(self, ckpt_dir: str, step: int | None = None) -> int:
-        return self.backend.restore(ckpt_dir, step)
+        step = self.backend.restore(ckpt_dir, step)
+        if self.exact is not None:
+            self.exact.load(ckpt_dir, step)
+        return step
 
     def stats_schema(self) -> tuple[str, ...]:
+        extra = ("n_exact_hits",) if self.exact is not None else ()
         return (("t_signature", "t_in_batch", "t_search", "t_insert",
                  "n_batch_drop", "n_index_drop", "n_insert", "n_overflow",
-                 "count") + tuple(self.backend.stats_schema()))
+                 "count") + extra + tuple(self.backend.stats_schema()))
 
     # -- step ① -------------------------------------------------------------
     def signatures(self, tokens, lengths) -> SigBatch:
@@ -276,16 +309,59 @@ class DedupPipeline:
         return StepResult(keep=keep, keep_in_batch=~np.asarray(hit),
                           ids=ids, sims=sims)
 
+    def _exact_hits(self, tokens, lengths):
+        """(hashes, hit, refs) for the exact front door; hit marks rows
+        whose content hash is already in the filter OR appeared earlier in
+        this batch (same hash → same signature → same eventual verdict, so
+        short-circuiting is verdict-preserving either way)."""
+        from repro.index.exact import batch_hashes
+        hashes = batch_hashes(tokens, lengths)
+        B = len(hashes)
+        hit = np.zeros(B, bool)
+        refs = np.full(B, -1, np.int64)
+        seen: set[int] = set()
+        for i, h in enumerate(hashes):
+            r = self.exact.lookup(h)
+            if r is not None:
+                hit[i] = True
+                refs[i] = r
+            elif h in seen:
+                hit[i] = True
+            else:
+                seen.add(h)
+        return hashes, hit, refs
+
     def process_batch(self, tokens, lengths) -> tuple[np.ndarray, dict]:
         """Dedup one incoming batch. Returns (keep_mask (B,), stats).
 
         Blocking composition of the two stage functions; per-stage timing
-        and admit/drop accounting preserved for the Fig. 7 breakdown."""
+        and admit/drop accounting preserved for the Fig. 7 breakdown. With
+        the exact-dup front end on (FoldConfig.exact_filter), content-hash
+        hits are dropped before signature generation — an all-hit batch
+        pays no device work at all."""
         stats: dict[str, Any] = {}
         # pre-batch occupancy (host sync — process_batch is the blocking
         # path): lets the overflow check below compare claimed admissions
         # against rows the backend actually landed
         count0 = self.backend.inserted
+
+        hashes = None
+        B = np.asarray(tokens).shape[0]
+        hit = np.zeros(B, bool)
+        if self.exact is not None:
+            hashes, hit, _refs = self._exact_hits(tokens, lengths)
+            n_hit = int(hit.sum())
+            if n_hit:
+                self.exact.record_hit(n_hit)
+            stats["n_exact_hits"] = n_hit
+            if hit.all():
+                # verbatim-replay fast path: no signatures, no search
+                for key in ("t_signature", "t_in_batch", "t_search",
+                            "t_insert"):
+                    stats[key] = 0.0
+                stats.update(n_batch_drop=0, n_index_drop=0, n_insert=0,
+                             count=count0, n_overflow=0)
+                return np.zeros(B, bool), stats
 
         t0 = time.perf_counter()
         sig = self.signatures(tokens, lengths)
@@ -295,12 +371,16 @@ class DedupPipeline:
                 break
         stats["t_signature"] = time.perf_counter() - t0
 
-        res = self.dedup_step(sig, timers=stats)
+        res = self.dedup_step(sig, valid=(~hit if hit.any() else None),
+                              timers=stats)
 
         keep = np.asarray(res.keep)
         keep_in_batch = np.asarray(res.keep_in_batch)
-        stats["n_batch_drop"] = int((~keep_in_batch).sum())
-        stats["n_index_drop"] = int((keep_in_batch & ~keep).sum())
+        if hashes is not None:
+            for i in np.flatnonzero(keep):
+                self.exact.add(hashes[int(i)])
+        stats["n_batch_drop"] = int((~keep_in_batch & ~hit).sum())
+        stats["n_index_drop"] = int((keep_in_batch & ~keep & ~hit).sum())
         stats["n_insert"] = int(keep.sum())
         stats["count"] = self.backend.inserted
         # rows whose verdict claims admission but which the backend did not
@@ -310,3 +390,43 @@ class DedupPipeline:
         stats["n_overflow"] = max(
             0, stats["n_insert"] - (stats["count"] - count0))
         return keep, stats
+
+    # -- read-only query (the replica / router surface) ---------------------
+    def query(self, tokens, lengths=None) -> QueryResult:
+        """Search-only "is this a dup?" verdicts — NOTHING is inserted.
+
+        This is the read-replica serving surface (repro.cluster): exact
+        front-door hits (when configured) skip the search entirely; other
+        rows pay step ① + step ③ against the current corpus and the
+        tau_index threshold. Host-synchronous by design — callers are
+        latency-measuring serving paths, not the pipelined admission loop.
+        """
+        toks = np.asarray(tokens)
+        B = toks.shape[0]
+        if lengths is None:
+            lengths = np.full(B, toks.shape[1], np.int32)
+        hit = np.zeros(B, bool)
+        refs = np.full(B, -1, np.int64)
+        if self.exact is not None:
+            _hashes, hit, refs = self._exact_hits(toks, lengths)
+            if hit.any():
+                self.exact.record_hit(int(hit.sum()))
+        k = max(1, int(getattr(getattr(self.backend, "cfg", None),
+                               "k", 1) or 1))
+        if B and hit.all():
+            ids = np.full((B, k), -1, np.int32)
+            ids[:, 0] = refs.astype(np.int32)
+            sims = np.zeros((B, k), np.float32)
+            sims[:, 0] = 1.0
+            return QueryResult(is_dup=np.ones(B, bool), ids=ids, sims=sims,
+                               exact_hit=hit)
+        sig = self.signatures(toks, lengths)
+        ids, sims = self.backend.search(sig)
+        ids = np.asarray(ids, np.int32).copy()
+        sims = np.asarray(sims, np.float32).copy()
+        is_dup = np.asarray((sims >= self.backend.tau_index).any(axis=-1))
+        if hit.any():
+            is_dup = is_dup | hit
+            ids[hit, 0] = refs[hit].astype(np.int32)
+            sims[hit, 0] = 1.0
+        return QueryResult(is_dup=is_dup, ids=ids, sims=sims, exact_hit=hit)

@@ -18,9 +18,11 @@ registers at import time:
 from __future__ import annotations
 
 import importlib
+import inspect
 from typing import Callable
 
-__all__ = ["register", "make", "make_pipeline", "available"]
+__all__ = ["register", "make", "make_pipeline", "available",
+           "accepted_opts", "validate_opts"]
 
 _REGISTRY: dict[str, Callable] = {}
 _BUILTINS_LOADED = False
@@ -51,6 +53,55 @@ def available() -> tuple[str, ...]:
     """Registered backend keys, sorted."""
     _ensure_builtins()
     return tuple(sorted(_REGISTRY))
+
+
+def accepted_opts(name: str) -> tuple[str, ...]:
+    """Keyword options the backend's factory accepts, sorted.
+
+    Named parameters of the registered factory (minus the positional
+    `cfg`); when the factory takes **opts it forwards them into
+    `dataclasses.replace` on the shared FoldConfig (the hnsw/hnsw_raw
+    convention), so the config's field names are accepted too."""
+    _ensure_builtins()
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown dedup backend {name!r}; "
+                       f"registered: {', '.join(available())}") from None
+    keys: set[str] = set()
+    var_kw = False
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):
+        return ()
+    for i, (pname, p) in enumerate(params.items()):
+        if p.kind == inspect.Parameter.VAR_KEYWORD:
+            var_kw = True
+        elif p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                        inspect.Parameter.KEYWORD_ONLY):
+            if not (i == 0 and pname == "cfg"):
+                keys.add(pname)
+    if var_kw:
+        import dataclasses
+
+        from repro.core.dedup import FoldConfig
+        keys.update(f.name for f in dataclasses.fields(FoldConfig))
+    return tuple(sorted(keys))
+
+
+def validate_opts(name: str, opts: dict) -> None:
+    """Raise ValueError naming unknown keys in `opts` (and listing the
+    accepted ones) instead of letting the factory silently ignore them.
+
+    Called by the serving layer on ServiceConfig.backend_opts; `make()`
+    itself stays permissive so third-party factories with exotic
+    signatures keep working."""
+    accepted = accepted_opts(name)
+    unknown = sorted(set(opts) - set(accepted))
+    if unknown:
+        raise ValueError(
+            f"unknown backend_opts {unknown} for backend {name!r}; "
+            f"accepted keys: {', '.join(accepted) or '(none)'}")
 
 
 def make(name: str, cfg=None, **opts):

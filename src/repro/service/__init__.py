@@ -6,14 +6,16 @@ management (growth + snapshot rotation), and a ticketed front API with
 serving metrics — all generic over any registered dedup backend
 (`ServiceConfig(backend="hnsw" | "dpk" | "flat_lsh" | ...)`).
 """
-from repro.service.batcher import MicroBatch, MicroBatcher, pow2_buckets  # noqa: F401
+from repro.service.batcher import (Backpressure, MicroBatch,  # noqa: F401
+                                   MicroBatcher, pow2_buckets)
 from repro.service.executor import BatchOutcome, PipelinedExecutor  # noqa: F401
 from repro.service.index_manager import IndexManager, ShardedDedupBackend  # noqa: F401
-from repro.service.metrics import MetricsRegistry  # noqa: F401
+from repro.service.metrics import LogHistogram, MetricsRegistry  # noqa: F401
 from repro.service.service import (DedupService, DocVerdict, ServiceConfig,  # noqa: F401
-                                   Ticket)
+                                   Ticket, resolve_backend)
 
-__all__ = ["MicroBatch", "MicroBatcher", "pow2_buckets", "BatchOutcome",
-           "PipelinedExecutor", "IndexManager", "ShardedDedupBackend",
-           "MetricsRegistry", "DedupService", "DocVerdict", "ServiceConfig",
-           "Ticket"]
+__all__ = ["MicroBatch", "MicroBatcher", "Backpressure", "pow2_buckets",
+           "BatchOutcome", "PipelinedExecutor", "IndexManager",
+           "ShardedDedupBackend", "MetricsRegistry", "LogHistogram",
+           "DedupService", "DocVerdict", "ServiceConfig", "Ticket",
+           "resolve_backend"]

@@ -21,7 +21,26 @@ from typing import Iterable, NamedTuple
 
 import numpy as np
 
-__all__ = ["MicroBatch", "MicroBatcher", "pow2_buckets"]
+__all__ = ["MicroBatch", "MicroBatcher", "Backpressure", "pow2_buckets"]
+
+
+class Backpressure(RuntimeError):
+    """Explicit admission rejection (bounded queue / tenant quota).
+
+    Raised by the ticket API *before* any document is enqueued — a rejected
+    submit leaves no partial state, so the caller retries the whole request
+    after `retry_after_s`. reason is "queue_full" (bounded admission queue)
+    or "qps_quota" (per-tenant token bucket, repro.cluster).
+    """
+
+    def __init__(self, reason: str, retry_after_s: float,
+                 tenant: str | None = None):
+        self.reason = reason
+        self.retry_after_s = float(retry_after_s)
+        self.tenant = tenant
+        who = f" (tenant {tenant!r})" if tenant else ""
+        super().__init__(f"admission rejected: {reason}{who}; "
+                         f"retry after {self.retry_after_s:.3f}s")
 
 
 class MicroBatch(NamedTuple):
@@ -67,12 +86,19 @@ class MicroBatcher:
     len_buckets   — allowed padded lengths L (docs longer than the largest
                     bucket are truncated to it; counted in `truncated`)
     batch_buckets — allowed batch sizes B (ascending, last == max_batch)
+    max_pending   — bound on the pending-doc queue (None = unbounded, the
+                    historical behavior). `add` raises Backpressure once
+                    the bound is hit; callers that want atomic all-or-
+                    nothing admission check `would_accept` first (the
+                    service does). `requeue` is exempt — those docs were
+                    already admitted and must not be lost.
     """
 
     def __init__(self, max_batch: int = 128, max_wait_ms: float = 5.0,
                  len_buckets: tuple[int, ...] | None = None,
                  batch_buckets: tuple[int, ...] | None = None,
-                 max_len: int = 512, clock=time.perf_counter):
+                 max_len: int = 512, max_pending: int | None = None,
+                 clock=time.perf_counter):
         if len_buckets is None:
             len_buckets = pow2_buckets(32, max_len)
         if batch_buckets is None:
@@ -84,6 +110,8 @@ class MicroBatcher:
         self.max_wait_ms = max_wait_ms
         self.len_buckets = tuple(sorted(len_buckets))
         self.batch_buckets = tuple(sorted(batch_buckets))
+        self.max_pending = max_pending
+        self.rejected = 0       # docs refused with Backpressure
         self._clock = clock
         # (doc_id, tokens, arrival time) — arrival drives the wait deadline
         self._docs: list[tuple[int, np.ndarray, float]] = []
@@ -91,8 +119,18 @@ class MicroBatcher:
         self.emitted_shapes: set[tuple[int, int]] = set()
 
     # ------------------------------------------------------------------ add
+    def would_accept(self, n: int = 1) -> bool:
+        """True iff `n` more docs fit under max_pending right now."""
+        return (self.max_pending is None
+                or len(self._docs) + n <= self.max_pending)
+
     def add(self, doc_id: int, tokens: np.ndarray):
-        """Queue one document (1-D token array)."""
+        """Queue one document (1-D token array). Raises Backpressure when
+        the bounded queue is full."""
+        if not self.would_accept(1):
+            self.rejected += 1
+            raise Backpressure("queue_full",
+                               retry_after_s=self.max_wait_ms / 1e3)
         tokens = np.asarray(tokens)
         cap = self.len_buckets[-1]
         if len(tokens) > cap:

@@ -85,6 +85,12 @@ class PipelinedExecutor:
     def inflight(self) -> int:
         return len(self._inflight)
 
+    @property
+    def inflight_docs(self) -> int:
+        """Valid docs dispatched but not yet materialized (backlog
+        accounting for the bounded-admission check)."""
+        return sum(mb.n_docs for mb, _, _, _ in self._inflight)
+
     def submit(self, mb: MicroBatch) -> None:
         """Dispatch one micro-batch; may materialize older ones to keep the
         pipeline no more than `depth` deep."""

@@ -56,6 +56,9 @@ class IndexManager:
         # restarted service never clobbers committed history
         self._snap_step = (ckpt.latest_step(snapshot_dir) or 0
                            if snapshot_dir else 0)
+        # last step this manager wrote (0 = none yet this process); the
+        # cluster writer publishes manifests only for steps it took itself
+        self.last_step = 0
 
     # ------------------------------------------------------------- growth
     def note_dispatched(self, n_docs: int):
@@ -132,7 +135,21 @@ class IndexManager:
         for old in (steps[:-keep] if keep > 0 else steps):
             shutil.rmtree(os.path.join(self.snapshot_dir,
                                        f"step_{old:08d}"))
+        if getattr(self.pipe, "exact", None) is not None:
+            # drop exact-filter sidecars for rotated-away steps (the
+            # current step's sidecar exists even while its array write is
+            # still in flight, so keep it explicitly)
+            kept = set(steps[-keep:] if keep > 0 else [])
+            kept.add(self._snap_step)
+            self.pipe.exact.prune_sidecars(self.snapshot_dir, kept)
+        self.last_step = self._snap_step
         return self._snap_step
+
+    def committed_steps(self) -> tuple[int, ...]:
+        """Snapshot steps currently committed on disk, ascending."""
+        if not self.snapshot_dir:
+            return ()
+        return tuple(ckpt.list_steps(self.snapshot_dir))
 
     def wait_snapshots(self):
         """Block until any in-flight async snapshot write has committed."""

@@ -31,14 +31,16 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core.dedup import FoldConfig
-from repro.index import make_pipeline
+from repro.index import make_pipeline, validate_opts
+from repro.index.exact import doc_hash
 from repro.lifecycle import LifecycleManager
-from repro.service.batcher import MicroBatcher
+from repro.service.batcher import Backpressure, MicroBatcher
 from repro.service.executor import BatchOutcome, PipelinedExecutor
 from repro.service.index_manager import IndexManager
 from repro.service.metrics import MetricsRegistry
 
-__all__ = ["ServiceConfig", "DedupService", "DocVerdict", "Ticket"]
+__all__ = ["ServiceConfig", "DedupService", "DocVerdict", "Ticket",
+           "Backpressure", "resolve_backend"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +84,13 @@ class ServiceConfig:
     # distribution: >1 selects the "hnsw_sharded" backend (requires that
     # many devices; fold.capacity is then per shard)
     shards: int = 1
+    # bounded admission: reject submits (Backpressure, with a retry-after
+    # hint) once pending + in-flight docs would exceed this bound, instead
+    # of letting the queue grow without limit under overload (None = the
+    # historical unbounded behavior). Rejection is all-or-nothing per
+    # submit — a rejected call enqueues nothing.
+    max_pending_docs: int | None = None
+    retry_after_s: float = 0.05
     # fire-and-forget producers that only read stats() should disable the
     # per-doc verdict store — it grows with every document until results()
     # pops it, i.e. forever if nobody asks
@@ -92,7 +101,7 @@ class ServiceConfig:
 class DocVerdict:
     doc_id: int
     admitted: bool
-    reason: str            # "admitted" | "batch_dup" | "index_dup"
+    reason: str            # "admitted" | "batch_dup" | "index_dup" | "exact_dup"
     neighbor_id: int       # best retrieved neighbor (-1 = none)
     similarity: float      # its similarity (-inf when no neighbor)
 
@@ -102,21 +111,33 @@ class Ticket(NamedTuple):
     stop: int    # last doc id covered (exclusive)
 
 
+def resolve_backend(cfg: ServiceConfig) -> tuple[str, dict]:
+    """(registry key, factory opts) for a service config — the shards>1
+    promotion to "hnsw_sharded" plus backend_opts validation against the
+    factory's accepted keys. Shared by DedupService and the cluster read
+    replicas, which must build the IDENTICAL pipeline shape."""
+    backend_key = cfg.backend
+    opts = dict(cfg.backend_opts)
+    if cfg.shards > 1:
+        if backend_key == "hnsw":
+            backend_key = "hnsw_sharded"
+        elif backend_key != "hnsw_sharded":
+            raise ValueError(
+                f"shards={cfg.shards} requires the 'hnsw_sharded' "
+                f"backend, got backend={cfg.backend!r}")
+        opts.setdefault("shards", cfg.shards)
+    # unknown keys raise with the accepted list instead of being silently
+    # swallowed by a **opts factory
+    validate_opts(backend_key, opts)
+    return backend_key, opts
+
+
 class DedupService:
     """Online dedup serving facade over any registered index backend."""
 
     def __init__(self, cfg: ServiceConfig | None = None):
         self.cfg = cfg = cfg or ServiceConfig()
-        backend_key = cfg.backend
-        opts = dict(cfg.backend_opts)
-        if cfg.shards > 1:
-            if backend_key == "hnsw":
-                backend_key = "hnsw_sharded"
-            elif backend_key != "hnsw_sharded":
-                raise ValueError(
-                    f"shards={cfg.shards} requires the 'hnsw_sharded' "
-                    f"backend, got backend={cfg.backend!r}")
-            opts.setdefault("shards", cfg.shards)
+        backend_key, opts = resolve_backend(cfg)
         self.pipeline = make_pipeline(backend_key, cfg=cfg.fold, **opts)
         be = self.pipeline.backend
         # capability flags are defaulted class attributes on DedupBackend
@@ -138,6 +159,17 @@ class DedupService:
         else:
             self.index_manager = None        # capacity is fixed at init
         if cfg.ttl_steps or cfg.max_live_docs is not None:
+            if self.pipeline.exact is not None:
+                # service-level lifecycle evicts by index slot and cannot
+                # map evictions back to content hashes, so the filter would
+                # keep vetoing re-admission of evicted docs forever. The
+                # cluster writer's per-tenant budgets DO maintain the
+                # (doc id, slot, hash) ledger — use those instead.
+                raise ValueError(
+                    "fold.exact_filter is incompatible with service-level "
+                    "ttl_steps/max_live_docs (evicted docs' hashes would "
+                    "veto their own re-admission); use repro.cluster "
+                    "per-tenant live-doc budgets instead")
             # raises for supports_deletion=False backends
             self.lifecycle = LifecycleManager(
                 self.pipeline, ttl_steps=cfg.ttl_steps,
@@ -148,7 +180,7 @@ class DedupService:
         self.batcher = MicroBatcher(
             max_batch=cfg.max_batch, max_wait_ms=cfg.max_wait_ms,
             len_buckets=cfg.len_buckets, batch_buckets=cfg.batch_buckets,
-            max_len=cfg.max_len)
+            max_len=cfg.max_len, max_pending=cfg.max_pending_docs)
         self.metrics = MetricsRegistry()
         self.executor = PipelinedExecutor(
             self.pipeline, depth=cfg.pipeline_depth,
@@ -156,29 +188,84 @@ class DedupService:
             timers_every=cfg.stage_timer_every)
         self._next_id = 0
         self._verdicts: dict[int, DocVerdict] = {}
+        # exact front door: content hash of each queued (not yet
+        # materialized) doc, so _record_outcome can register admitted docs
+        # in the filter under their service doc id
+        self._pending_hash: dict[int, int] = {}
+        # extension hooks invoked (in order) at the END of every
+        # materialized-batch callback — the cluster writer wires manifest
+        # publication and tenant ledger upkeep here
+        self.outcome_hooks: list = []
 
     @property
     def backend(self):
         """The serving pipeline (kept under the pre-PR-2 attribute name)."""
         return self.pipeline
 
+    @property
+    def next_doc_id(self) -> int:
+        """The doc id the next submitted document will receive (ids are
+        assigned sequentially; the cluster writer uses this to register
+        per-tenant ownership before outcomes can materialize)."""
+        return self._next_id
+
     # ------------------------------------------------------------ ingest
+    def backlog(self) -> int:
+        """Docs accepted but not yet materialized (queued + in flight)."""
+        return self.batcher.pending + self.executor.inflight_docs
+
+    def admission_headroom(self) -> int | None:
+        """Docs a submit may add before Backpressure (None = unbounded)."""
+        if self.cfg.max_pending_docs is None:
+            return None
+        return max(0, self.cfg.max_pending_docs - self.backlog())
+
     def submit(self, docs, lengths=None) -> Ticket:
         """Queue documents; returns a ticket covering their doc ids.
 
         docs: either an iterable of 1-D token arrays, or a padded (N, L)
-        matrix with `lengths` (the corpus/ingest interchange format)."""
-        start = self._next_id
+        matrix with `lengths` (the corpus/ingest interchange format).
+
+        Raises Backpressure (all-or-nothing: nothing was enqueued) when
+        max_pending_docs is configured and the request does not fit.
+
+        With the exact-dup front end on (fold.exact_filter), documents
+        whose content hash is already known are resolved HERE — an instant
+        "exact_dup" verdict, no batching, no signature, no search."""
         if lengths is not None:
             docs = np.asarray(docs)
-            n = docs.shape[0]
-            self.batcher.add_many(range(start, start + n), docs, lengths)
-            self._next_id += n
+            seq = [docs[i, : int(lengths[i])] for i in range(docs.shape[0])]
         else:
-            for d in docs:
-                self.batcher.add(self._next_id, np.asarray(d))
-                self._next_id += 1
-        self.metrics.inc("docs_in", self._next_id - start)
+            seq = [np.asarray(d) for d in docs]
+        n = len(seq)
+        if self.cfg.max_pending_docs is not None \
+                and self.backlog() + n > self.cfg.max_pending_docs:
+            self.metrics.inc("docs_rejected", n)
+            raise Backpressure("queue_full",
+                               retry_after_s=self.cfg.retry_after_s)
+        start = self._next_id
+        exact = self.pipeline.exact
+        cap = self.batcher.len_buckets[-1]
+        for d in seq:
+            did = self._next_id
+            self._next_id += 1
+            if exact is not None:
+                # hash what the batcher will actually process (truncation
+                # included), so replays of over-length docs still hit
+                h = doc_hash(d[:cap])
+                ref = exact.lookup(h)
+                if ref is not None:
+                    exact.record_hit()
+                    self.metrics.inc("exact_dup")
+                    self.metrics.inc("docs_out")
+                    if self.cfg.record_verdicts:
+                        self._verdicts[did] = DocVerdict(
+                            doc_id=did, admitted=False, reason="exact_dup",
+                            neighbor_id=int(ref), similarity=1.0)
+                    continue
+                self._pending_hash[did] = h
+            self.batcher.add(did, d)
+        self.metrics.inc("docs_in", n)
         self._pump()
         return Ticket(start, self._next_id)
 
@@ -234,6 +321,16 @@ class DedupService:
         rows = np.arange(len(best))
         nbr_ids = out.ids[rows, best]
         nbr_sims = out.sims[rows, best]
+        exact = self.pipeline.exact
+        if exact is not None:
+            # register admitted docs' content hashes under their doc id so
+            # future verbatim replays short-circuit at submit (and evicting
+            # the doc can discard exactly its entry)
+            for i in np.flatnonzero(mb.valid):
+                did = int(mb.doc_ids[i])
+                h = self._pending_hash.pop(did, None)
+                if h is not None and out.keep[i]:
+                    exact.add(h, ref=did)
         for i in np.flatnonzero(mb.valid):
             if out.keep[i]:
                 reason = "admitted"
@@ -256,6 +353,13 @@ class DedupService:
             n = self.lifecycle.after_batch()
             if n:
                 self.metrics.inc("docs_deleted", n)
+        for hook in self.outcome_hooks:
+            hook(out)
+
+    def verdict_ready(self, doc_id: int) -> bool:
+        """True iff the doc's verdict is already in the store (requires
+        record_verdicts; verdicts leave the store when results() pops)."""
+        return doc_id in self._verdicts
 
     def results(self, ticket: Ticket) -> list[DocVerdict]:
         """Per-doc verdicts for a ticket, flushing if still in flight.
@@ -289,6 +393,9 @@ class DedupService:
                           if self.lifecycle else 0.0),
             "backend_stats": backend_stats,
         }
+        if self.pipeline.exact is not None:
+            snap["index"]["exact_hits"] = self.pipeline.exact.hits
+            snap["index"]["exact_entries"] = len(self.pipeline.exact)
         if self.lifecycle is not None:
             snap["lifecycle"] = self.lifecycle.stats()
         snap["batching"] = {
@@ -296,5 +403,8 @@ class DedupService:
             "truncated_docs": self.batcher.truncated,
             "pending_docs": self.batcher.pending,
             "inflight_batches": self.executor.inflight,
+            "inflight_docs": self.executor.inflight_docs,
+            "rejected_docs": self.metrics.counters.get("docs_rejected", 0)
+            + self.batcher.rejected,
         }
         return snap

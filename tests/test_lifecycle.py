@@ -273,3 +273,43 @@ def test_service_stats_without_lifecycle_are_inert():
     assert s["index"]["n_deleted"] == 0
     assert s["index"]["dead_fraction"] == 0.0
     assert s["index"]["t_compact"] == 0.0
+
+
+# ------------------------------------- replica read-path round-trip
+def test_replica_restore_matches_writer_including_tombstones(tmp_path):
+    """Cluster read path: a ReadReplica restored at the writer's published
+    epoch returns search verdicts IDENTICAL to the writer's own index —
+    including tombstone state (deleted docs are not dups on either side,
+    live docs are dups on both)."""
+    from repro.cluster import ClusterConfig, DedupCluster
+
+    from repro.service import ServiceConfig
+    scfg = ServiceConfig(
+        fold=CFG, backend="hnsw", max_batch=32, max_wait_ms=0.0,
+        batch_buckets=(32,), max_len=64, stage_timer_every=0,
+        snapshot_dir=str(tmp_path))
+    cl = DedupCluster(ClusterConfig(service=scfg, n_replicas=2))
+    t, l = _batch(64, seed=12)
+    cl.results(cl.submit(t, l))
+
+    # tombstone every other admitted doc through the deletion contract
+    pipe = cl.writer.service.pipeline
+    sig = pipe.signatures(t, l)
+    ids, _sims = pipe.backend.search(sig)
+    ids = np.asarray(ids)
+    live = np.unique(ids[ids >= 0])
+    kill = live[::2]
+    pipe.delete(kill)
+
+    assert cl.publish() >= 1
+    assert cl.refresh_replicas() == 2
+
+    qw = cl.writer.query(t, l)
+    assert qw.is_dup.any() and not qw.is_dup.all()   # half tombstoned
+    for r in cl.replicas:
+        qr = r.query(t, l)
+        assert r.epoch == cl.writer.epoch
+        assert np.array_equal(qw.is_dup, qr.is_dup)
+        assert np.array_equal(qw.ids, qr.ids)
+        assert np.allclose(qw.sims, qr.sims)
+        assert qr.exact_hit.sum() == 0               # CFG has no exact filter
