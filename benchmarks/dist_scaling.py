@@ -1,13 +1,20 @@
 """Beyond-paper: distributed-dedup scaling across index shards.
 
-Runs the shard_map dedup step under 1/2/4/8 virtual devices (subprocesses —
-device count is fixed at jax init) on the identical stream and reports
-throughput plus admitted-count consistency: sharding the index must not
-change *what* is admitted (recall-monotone merge, DESIGN.md §2), only how
-fast. On real hardware the shards are pod slices; here the virtual devices
-share one CPU so per-shard *work* (distance evals/shard) is the proxy:
-admitted counts must agree across shard counts while per-shard corpus
-shrinks ~linearly.
+Drives the PROMOTED "hnsw_sharded" backend (repro.index) under 1/2/4/8
+virtual devices (subprocesses — device count is fixed at jax init) on the
+identical stream and reports, per shard count:
+
+  * insert-path throughput (docs/s through DedupPipeline.process_batch —
+    the fused gather -> per-shard search -> pmax merge -> round-robin
+    insert program), and
+  * search-path throughput (queries/s through the read-only
+    DedupPipeline.query merged top-k — the replica serving path),
+
+plus admitted-count consistency: sharding the index must not change *what*
+is admitted (recall-monotone merge, DESIGN.md §2), only how fast. On real
+hardware the shards are pod slices; here the virtual devices share one CPU
+so per-shard *work* (distance evals/shard) is the proxy: admitted counts
+must agree across shard counts while per-shard corpus shrinks ~linearly.
 """
 from __future__ import annotations
 
@@ -18,48 +25,49 @@ import textwrap
 
 _WORKER = """
 import time
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax
 nshards = {nshards}
-mesh = jax.make_mesh((nshards, 1), ("data", "model"))
-from repro.core.hnsw import HNSWConfig, sample_levels
-from repro.core.sharded import sharded_init, make_sharded_dedup_step
-from repro.core.bitmap import pack_bitmaps, popcount
-from repro.core.hashing import hash_seeds
-from repro.core.shingle import shingle_hashes
-from repro.kernels import ops
+from repro.core.dedup import FoldConfig
 from repro.data import DATASET_PRESETS, SyntheticCorpus
+from repro.index import make_pipeline
 
-cfg = HNSWConfig(capacity=8192 // nshards, words=128, M=12, M0=24,
-                 ef_construction=32, ef_search=32, max_level=3)
-states = sharded_init(cfg, mesh)
-step = jax.jit(make_sharded_dedup_step(cfg, mesh, tau=0.538, k=4))
-seeds = hash_seeds(112)
+# total capacity is fixed across shard counts (per-shard = total/nshards)
+cfg = FoldConfig(capacity=8192 // nshards, M=12, M0=24, ef_construction=32,
+                 ef_search=32, max_level=3, threshold_space="minhash")
+pipe = make_pipeline("hnsw_sharded", cfg=cfg, shards=nshards)
 src = SyntheticCorpus(DATASET_PRESETS["common_crawl"])
 admitted = 0
-t_steady = 0.0
+t_ins = 0.0
+probe = None
 for c in range({cycles}):
     toks, lens, _ = src.next_batch({batch})
-    sh = shingle_hashes(jnp.asarray(toks, jnp.uint32),
-                        jnp.asarray(lens, jnp.int32), 5)
-    sigs = ops.minhash(sh, seeds)
-    bm = pack_bitmaps(sigs, T=4096)
+    if probe is None:
+        probe = (toks, lens)
     t0 = time.time()
-    states, keep = step(states, bm, popcount(bm),
-                        jnp.asarray(sample_levels({batch}, cfg, seed=c)))
-    keep.block_until_ready()
-    if c > 0:
-        t_steady += time.time() - t0
-    admitted += int(keep.sum())
-print("RESULT", admitted, round(({cycles}-1)*{batch}/t_steady, 1))
+    keep, _ = pipe.process_batch(toks, lens)
+    t1 = time.time()
+    if c > 0:                       # drop the compile cycle
+        t_ins += t1 - t0
+    admitted += int(np.asarray(keep).sum())
+# read-only merged-top-k search (replica serving path) on the first batch
+pipe.query(*probe)                  # compile
+t0 = time.time()
+for _ in range(3):
+    out = pipe.query(*probe)
+t_q = (time.time() - t0) / 3
+print("RESULT", admitted,
+      round(({cycles}-1)*{batch}/t_ins, 1),
+      round({batch}/t_q, 1))
 """
 
 
 def run(quick: bool = False):
     cycles, batch = (3, 256) if quick else (4, 512)
+    shard_counts = (1, 2, 4) if quick else (1, 2, 4, 8)
     src_dir = os.path.join(os.path.dirname(__file__), "..", "src")
     rows = []
     base_admitted = None
-    for nshards in (1, 2, 4, 8):
+    for nshards in shard_counts:
         env = dict(os.environ,
                    XLA_FLAGS=f"--xla_force_host_platform_device_count={nshards}",
                    PYTHONPATH=src_dir)
@@ -72,12 +80,12 @@ def run(quick: bool = False):
                          "ERROR:" + out.stderr.strip().splitlines()[-1][:80]))
             continue
         line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
-        _, admitted, tp = line.split()
+        _, admitted, ins_tp, q_tp = line.split()
         if base_admitted is None:
             base_admitted = int(admitted)
         drift = abs(int(admitted) - base_admitted)
         rows.append((f"dist_scaling/shards={nshards}",
-                     round(1e6 / float(tp), 1),
-                     f"docs_per_s={tp};admitted={admitted};"
-                     f"admit_drift_vs_1shard={drift}"))
+                     round(1e6 / float(ins_tp), 1),
+                     f"insert_docs_per_s={ins_tp};search_docs_per_s={q_tp};"
+                     f"admitted={admitted};admit_drift_vs_1shard={drift}"))
     return rows

@@ -17,6 +17,13 @@ Degradation is graceful by construction:
 
 Staleness metrics (`epochs_behind`, seconds since refresh) feed the
 router's max_staleness_epochs policy and the load harness report.
+
+On the "hnsw_sharded" backend the replica's query path is the fused
+merged top-k search (global interleaved ids, identical to the writer's),
+and restoring a published epoch obeys the shard-layout rules: a replica
+must see >= as many devices as the snapshot has shards (scale-out
+restores pad empty shards; scale-in is refused because per-shard HNSW
+graphs cannot be merged).
 """
 from __future__ import annotations
 

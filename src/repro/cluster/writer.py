@@ -24,6 +24,13 @@ execution, growth, snapshot rotation) and adds the cluster-facing duties:
 
 The writer is caller-driven like everything else in the repo: no threads,
 no daemons — `submit`/`poll`/`flush` pump the machinery.
+
+The index organization underneath is pluggable (`ServiceConfig.backend`)
+and includes the multi-device fused "hnsw_sharded" backend: published
+epochs are then the backend's coordinated per-shard-stacked snapshots,
+and the slot ids in the tenancy ledger are its GLOBAL interleaved ids
+(`local * nshards + shard`), which the deletion contract routes to the
+owning shard — budget evictions work unchanged across a mesh.
 """
 from __future__ import annotations
 

@@ -33,12 +33,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_init,
-                             hnsw_insert_batch, hnsw_search)
+from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_compact, hnsw_delete,
+                             hnsw_init, hnsw_insert_batch, hnsw_search)
 from repro.index.pipeline import greedy_leader
 from repro.kernels import ref as kref
 
-__all__ = ["sharded_init", "make_sharded_dedup_step", "sharded_state_specs"]
+__all__ = ["sharded_init", "make_sharded_dedup_step", "sharded_state_specs",
+           "sharded_grow", "make_sharded_delete", "make_sharded_compact",
+           "make_sharded_search"]
 
 
 def sharded_init(cfg: HNSWConfig, mesh: Mesh, axis: str = "data") -> HNSWState:
@@ -57,12 +59,123 @@ def sharded_state_specs(mesh: Mesh, axis: str = "data"):
     return HNSWState(*(spec() for _ in HNSWState._fields))
 
 
+def sharded_grow(cfg: HNSWConfig, states: HNSWState, new_capacity: int,
+                 mesh: Mesh, axis: str = "data"
+                 ) -> tuple[HNSWConfig, HNSWState]:
+    """Re-pad every shard's state to a larger PER-SHARD capacity.
+
+    The stacked-state analogue of core.hnsw.hnsw_grow: each sub-graph is
+    preserved exactly (new slots empty, -1 level / -1 adjacency), the
+    per-shard scalars (entry/top_level/count) are untouched, and the result
+    is re-placed onto the mesh with the same leading-axis shardings. The
+    caller re-lowers the fused step against the new static capacity (one
+    recompile per growth — the serving layer grows geometrically)."""
+    if new_capacity < cfg.capacity:
+        raise ValueError(f"cannot shrink: {new_capacity} < {cfg.capacity}")
+    if new_capacity == cfg.capacity:
+        return cfg, states
+    pad = new_capacity - cfg.capacity
+    new_cfg = cfg._replace(capacity=new_capacity)
+    new_states = HNSWState(
+        vectors=jnp.pad(states.vectors, ((0, 0), (0, pad), (0, 0))),
+        pb=jnp.pad(states.pb, ((0, 0), (0, pad))),
+        neighbors=jnp.pad(states.neighbors, ((0, 0), (0, 0), (0, pad),
+                                             (0, 0)), constant_values=-1),
+        node_level=jnp.pad(states.node_level, ((0, 0), (0, pad)),
+                           constant_values=-1),
+        dead=jnp.pad(states.dead, ((0, 0), (0, pad))),
+        entry=states.entry,
+        top_level=states.top_level,
+        count=states.count,
+    )
+    specs = sharded_state_specs(mesh, axis)
+    return new_cfg, jax.tree.map(lambda x, s: jax.device_put(x, s),
+                                 new_states, specs)
+
+
+def _smap(mesh: Mesh):
+    """shard_map constructor across JAX versions (see make_sharded_dedup_step)."""
+    if hasattr(jax, "shard_map"):
+        return functools.partial(jax.shard_map, mesh=mesh, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return functools.partial(_shard_map, mesh=mesh, check_rep=False)
+
+
+def _state_specs_p(axis: str):
+    return HNSWState(*(P(axis),) * len(HNSWState._fields))
+
+
+def make_sharded_delete(cfg: HNSWConfig, mesh: Mesh, axis: str = "data"):
+    """Returns jit-able `delete(states, ids) -> (states, n_newly_dead)`.
+
+    ids (nshards, D) int32, -1 padded, LOCAL per-shard slot ids sharded on
+    the leading axis — each device tombstones its own rows (core.hnsw
+    hnsw_delete semantics: out-of-range / unused / already-dead ignored).
+    n_newly_dead comes back per shard, (nshards,)."""
+    def local(state, ids):
+        state = jax.tree.map(lambda x: x[0], state)
+        state, n = hnsw_delete(cfg, state, ids[0])
+        return jax.tree.map(lambda x: x[None], state), n[None]
+
+    return _smap(mesh)(local, in_specs=(_state_specs_p(axis), P(axis)),
+                       out_specs=(_state_specs_p(axis), P(axis)))
+
+
+def make_sharded_search(cfg: HNSWConfig, mesh: Mesh, *, k: int = 4,
+                        axis: str = "data", query_chunk: int | None = None):
+    """Returns jit-able read-only `search(states, bitmaps, pcs) ->
+    (ids, sims)`: every shard searches its sub-graph for the all-gathered
+    queries, the per-shard top-k are merged into one global top-k, and ids
+    come back as GLOBAL interleaved slot ids (local * nshards + shard) —
+    the replica/query serving path of the sharded backend. bitmaps/pcs are
+    sharded over `axis` on the batch dim; outputs (B, k) replicated."""
+    nshards = mesh.shape[axis]
+
+    def local(state, bitmaps, pcs):
+        state = jax.tree.map(lambda x: x[0], state)
+        my = jax.lax.axis_index(axis)
+        q = jax.lax.all_gather(bitmaps, axis, tiled=True)       # (B, W)
+        pc = jax.lax.all_gather(pcs, axis, tiled=True)
+        ids, sims = hnsw_search(cfg, state, q, k=k, query_chunk=query_chunk)
+        gids = jnp.where(ids >= 0, ids * nshards + my, -1)
+        sims = jnp.where(ids >= 0, sims, -jnp.inf)
+        all_ids = jax.lax.all_gather(gids, axis)                # (n, B, k)
+        all_sims = jax.lax.all_gather(sims, axis)
+        B = q.shape[0]
+        all_ids = jnp.moveaxis(all_ids, 0, 1).reshape(B, -1)    # (B, n*k)
+        all_sims = jnp.moveaxis(all_sims, 0, 1).reshape(B, -1)
+        top, ix = jax.lax.top_k(all_sims, k)
+        mids = jnp.take_along_axis(all_ids, ix, axis=1)
+        return jnp.where(jnp.isfinite(top), mids, -1), top
+
+    return _smap(mesh)(local,
+                       in_specs=(_state_specs_p(axis), P(axis), P(axis)),
+                       out_specs=(P(), P()))
+
+
+def make_sharded_compact(cfg: HNSWConfig, mesh: Mesh, axis: str = "data"):
+    """Returns jit-able `compact(states) -> (states, n_reclaimed)`.
+
+    Runs core.hnsw's online compaction (adjacency repair around tombstones,
+    unlink, entry re-election) independently on every sub-graph; shards
+    never reference each other's slots so per-shard repair is complete.
+    n_reclaimed comes back per shard, (nshards,)."""
+    def local(state):
+        state = jax.tree.map(lambda x: x[0], state)
+        state, n = hnsw_compact(cfg, state)
+        return jax.tree.map(lambda x: x[None], state), n[None]
+
+    return _smap(mesh)(local, in_specs=(_state_specs_p(axis),),
+                       out_specs=(_state_specs_p(axis), P(axis)))
+
+
 def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
                             k: int = 4, axis: str = "data",
                             query_chunk: int | None = None,
                             sub_batches: int = 1,
                             masked: bool = False,
-                            reuse_search: bool = True):
+                            reuse_search: bool = True,
+                            free_slots: bool = False):
     """Returns jit-able `step(states, bitmaps, pcs, levels) -> (states, keep)`.
 
     bitmaps (B, W) sharded over `axis` on the batch dim; states stacked
@@ -86,10 +199,19 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
     ids the step-(3) local search just retrieved for the same queries —
     the fused step never walks its shard twice for one document. Only
     consulted when cfg.batched_insert is on.
+
+    free_slots=True adds a trailing argument `frees (nshards, F) int32`
+    (-1 padded, sharded on the leading axis like the states): each shard's
+    row holds reclaimed LOCAL slot ids (from make_sharded_compact) that its
+    insert consumes before fresh capacity — the deletion contract's
+    free-slot reuse, per shard. Incompatible with sub_batches > 1 (each
+    sub-batch would re-consume the same frees).
     """
     nshards = mesh.shape[axis]
+    if free_slots and sub_batches > 1:
+        raise ValueError("free_slots is incompatible with sub_batches > 1")
 
-    def one_sub(state, my, q, pc, lv, va):
+    def one_sub(state, my, q, pc, lv, va, fs=None):
         B = q.shape[0]
         # (2) in-batch dedup — block-chunked pairwise (no (B,B,W) temp)
         from repro.core.bitmap import chunked_pairwise_bitmap_jaccard
@@ -109,10 +231,12 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
         mine = (jnp.arange(B, dtype=jnp.int32) % nshards) == my
         seeds = ids if (reuse_search and cfg.batched_insert) else None
         state, _ = hnsw_insert_batch(cfg, state, q, pc, lv, keep & mine,
-                                     seed_ids=seeds)
+                                     seed_ids=seeds, free_slots=fs)
         return state, keep, keep_in
 
-    def local(state, bitmaps, pcs, levels, valid=None):
+    def local(state, bitmaps, pcs, levels, *rest):
+        valid = rest[0] if masked else None
+        frees = rest[-1] if free_slots else None
         # shard_map keeps a size-1 leading block axis; drop it per device
         state = jax.tree.map(lambda x: x[0], state)
         my = jax.lax.axis_index(axis)
@@ -137,7 +261,9 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
             keep_in = jnp.concatenate(keep_ins)
         else:
             state, keep, keep_in = one_sub(state, my, q_all, pc_all, lv_all,
-                                           va_all)
+                                           va_all,
+                                           frees[0] if frees is not None
+                                           else None)
         state = jax.tree.map(lambda x: x[None], state)
         if masked:
             return state, keep, keep_in
@@ -150,7 +276,7 @@ def make_sharded_dedup_step(cfg: HNSWConfig, mesh: Mesh, *, tau: float,
     else:
         from jax.experimental.shard_map import shard_map as _shard_map
         smap = functools.partial(_shard_map, check_rep=False)
-    n_in = 5 if masked else 4
+    n_in = (5 if masked else 4) + (1 if free_slots else 0)
     out_keep = (P(), P()) if masked else (P(),)
     step = smap(
         local, mesh=mesh,

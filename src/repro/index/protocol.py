@@ -150,6 +150,10 @@ class DedupBackend(Protocol):
           sharded HNSW step) that cannot be split without losing fusion.
           The pipeline does the Fig. 7 timing around the call (recorded
           under t_fused_step); fused backends never see the timers dict.
+          A fused backend must STILL implement `search` — the read-only
+          query path (DedupPipeline.query, the cluster read replicas)
+          calls it directly; only batch_sim/insert may refuse with a
+          use-fused_step NotImplementedError.
       in_batch_keep(sig, eligible) -> (keep, batch_hit)
           Replace the sim-matrix greedy sweep with a backend-native one
           (e.g. lazy host-side set comparisons). Only consulted for

@@ -15,11 +15,15 @@ layout: every `snapshot_every` batches the pipeline state is saved and only
 the newest `max_snapshots` committed steps are kept — restart cost is
 bounded and disk does not grow with corpus lifetime.
 
-Sharding. `ShardedDedupBackend` (now a registered `repro.index` backend,
-key "hnsw_sharded" — re-exported here for compatibility) routes the dedup
-step onto the core/sharded.py multi-shard program behind the same protocol
-surface the executor drives; it declares supports_growth=False /
-supports_snapshots=False, so the service runs it without an IndexManager.
+Sharding. `ShardedDedupBackend` (a registered `repro.index` backend, key
+"hnsw_sharded" — re-exported here for compatibility) routes the dedup step
+onto the core/sharded.py multi-shard program behind the same protocol
+surface the executor drives. It is a full lifecycle peer of "hnsw"
+(supports_growth / supports_snapshots / supports_deletion all True): the
+manager's watermark grows every shard's sub-graph at once (grow() re-pads
+per-shard capacity to ceil(total/nshards)), and snapshot rotation writes
+one coordinated per-shard-stacked checkpoint with a shard-layout manifest
+(restorable onto >= as many shards; see the backend's restore()).
 """
 from __future__ import annotations
 

@@ -387,33 +387,9 @@ def test_direct_grow_preserves_verdicts():
         assert k1.sum() > 0 and np.asarray(k2).sum() == 0, key
 
 
-# ------------------------------------------------- capacity overflow sweep
-@pytest.mark.parametrize("key,opts", [
-    ("hnsw", {}), ("hnsw_raw", {}), ("dpk", {}), ("flat_lsh", {}),
-])
-def test_overflow_refused_not_silently_dropped(key, opts):
-    """AC: no backend may return verdicts claiming admission for rows it
-    dropped at capacity. Fixed-store backends refuse the batch loudly; after
-    an explicit grow() the same batch succeeds and every claimed admission
-    is really in the index."""
-    batches = _stream(2, 64, dataset="lm1b")     # ~2% dups: fills fast
-    cfg = FoldConfig(capacity=48, M=8, M0=16, ef_construction=16,
-                     ef_search=16, tau=TAU, threshold_space="minhash")
-    pipe = make_pipeline(key, cfg=cfg, **opts)
-    with pytest.raises(RuntimeError, match="grow|full"):
-        for t, l in batches:
-            pipe.process_batch(t, l)
-    # the refusal left claimed == realized (nothing silently dropped)
-    assert pipe.inserted <= pipe.capacity
-    pre = pipe.inserted
-    pipe.grow(1 << 12)
-    keeps = [np.asarray(pipe.process_batch(t, l)[0]) for t, l in batches]
-    total = int(np.concatenate(keeps).sum())
-    # the grown index landed every claimed admission, on top of whatever
-    # the refused run had already inserted before raising
-    assert pipe.inserted == pre + total
-
-
+# Overflow refusal + grow() round-trip moved to the registry-wide
+# conformance battery (tests/test_contract.py) — it now runs against
+# EVERY registered backend, capability-driven, not a hand-picked list.
 def test_pipeline_n_overflow_stat_flags_silent_drops():
     """DedupPipeline.process_batch surfaces n_overflow (claimed admissions
     minus realized count delta) for third-party backends that neither grow
@@ -516,50 +492,10 @@ def test_replay_is_duplicate_with_and_without_reuse_search():
         assert np.asarray(replay).sum() == 0, f"reuse_search={reuse}"
 
 
-# ----------------------------------------------- restore error contract
-@pytest.mark.parametrize("key", ["hnsw", "hnsw_raw", "dpk", "flat_lsh",
-                                 "brute", "prefix_filter"])
-def test_restore_missing_checkpoint_raises_filenotfound(tmp_path, key):
-    """Satellite regression: 'no committed checkpoint' used to be a bare
-    assert that vanishes under `python -O`; every backend now raises
-    FileNotFoundError naming the directory."""
-    pipe = make_pipeline(key, cfg=FC)
-    with pytest.raises(FileNotFoundError, match="no committed checkpoint"):
-        pipe.restore(str(tmp_path))
-    try:
-        pipe.restore(str(tmp_path))
-    except FileNotFoundError as e:
-        assert str(tmp_path) in str(e)
-
-
-# ------------------------------------------------- snapshots & round-trips
-@pytest.mark.parametrize("key", ["hnsw", "dpk", "brute", "prefix_filter"])
-def test_restore_then_grow_roundtrip(key):
-    """Satellite: snapshot at small capacity → restore into a larger
-    config → identical verdicts (and the restored index is grown to the
-    configured capacity)."""
-    import tempfile
-    batches = _stream(2, 48)
-    small = FoldConfig(capacity=256, ef_construction=16, ef_search=16,
-                       M=8, M0=16, tau=TAU, threshold_space="minhash")
-    big = FoldConfig(capacity=1024, ef_construction=16, ef_search=16,
-                     M=8, M0=16, tau=TAU, threshold_space="minhash")
-    with tempfile.TemporaryDirectory() as d:
-        pipe = make_pipeline(key, cfg=small)
-        pipe.process_batch(*batches[0])
-        pipe.save(d, step=1)
-
-        pipe2 = make_pipeline(key, cfg=big)
-        assert pipe2.restore(d, 1) == 1
-        assert pipe2.capacity == 1024           # grown back after the load
-        assert pipe2.inserted == pipe.inserted
-        keep_ref, _ = pipe.process_batch(*batches[1])
-        keep_got, _ = pipe2.process_batch(*batches[1])
-        assert np.array_equal(np.asarray(keep_got), np.asarray(keep_ref))
-        replay, _ = pipe2.process_batch(*batches[0])    # all dups
-        assert np.asarray(replay).sum() == 0
-
-
+# Restore error contract (missing checkpoint -> FileNotFoundError) and the
+# restore-into-larger-capacity round-trip moved to the registry-wide
+# conformance battery (tests/test_contract.py), which runs them against
+# every supports_snapshots backend instead of a hand-picked list.
 def test_fold_snapshot_drops_dead_inserted_field(tmp_path):
     """Satellite: FoldPipeline.save no longer writes the 'inserted' leaf
     that restore() always ignored — the tree is exactly the HNSW state plus

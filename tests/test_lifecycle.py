@@ -32,37 +32,9 @@ def _admitted_slots(pipe):
     return np.concatenate(logs) if logs else np.empty(0, np.int64)
 
 
-# ------------------------------------------------- delete then reinsert
-@pytest.mark.parametrize("key", ["hnsw", "flat_lsh", "brute"])
-def test_delete_then_reinsert_verdict_correct(key):
-    """DELETION CONTRACT: after delete(ids), resubmitting exactly those
-    documents readmits them — and ONLY them (live docs stay duplicates)."""
-    t, l = _batch(64, seed=1)
-    pipe = make_pipeline(key, cfg=CFG)
-    pipe.backend.track_slots = True
-    keep1, _ = pipe.process_batch(t, l)
-    keep1 = np.asarray(keep1)
-    slots = _admitted_slots(pipe)
-    n0 = pipe.inserted
-    assert len(slots) == keep1.sum() == n0 > 0
-
-    replay, _ = pipe.process_batch(t, l)
-    assert np.asarray(replay).sum() == 0        # everything is a dup
-
-    kill = slots[::2]                           # tombstone every other doc
-    assert pipe.delete(kill) == len(kill)
-    assert pipe.deleted == len(kill)
-    assert pipe.inserted == n0 - len(kill)      # inserted counts LIVE docs
-    assert pipe.delete(kill) == 0               # idempotent
-
-    keep3 = np.asarray(pipe.process_batch(t, l)[0])
-    admitted_docs = np.flatnonzero(keep1)
-    expect = np.zeros_like(keep3)
-    expect[admitted_docs[::2]] = True           # the killed docs, no others
-    assert np.array_equal(keep3, expect)
-    assert pipe.inserted == n0
-
-
+# Delete-then-reinsert verdict correctness moved to the registry-wide
+# conformance battery (tests/test_contract.py) — it runs against every
+# supports_deletion backend, including hnsw_sharded on a device mesh.
 def test_hnsw_raw_delete_readmits_deleted_docs():
     """hnsw_raw verifies in the low-recall minhash_jaccard space, so the
     only portable guarantee is one-sided: every deleted doc is readmitted
@@ -198,17 +170,9 @@ def test_compact_repairs_connectivity_and_entry():
     assert np.mean(hit) >= 0.95
 
 
-# ------------------------------------------------ unsupported backends
-@pytest.mark.parametrize("key", ["dpk", "prefix_filter"])
-def test_delete_unsupported_raises_clearly(key):
-    pipe = make_pipeline(key, cfg=CFG)
-    assert not pipe.backend.supports_deletion
-    with pytest.raises(NotImplementedError, match="supports_deletion"):
-        pipe.delete([0])
-    # protocol defaults: deletion-free backends read as pristine
-    assert pipe.deleted == 0
-    assert pipe.dead_fraction == 0.0
-    assert pipe.compact() == {"reclaimed": 0}
+# The unsupported-deletion refusal (NotImplementedError naming the flag,
+# pristine read-side defaults) is covered for every supports_deletion=False
+# backend by the conformance battery in tests/test_contract.py.
 
 
 # ------------------------------------------------------- service layer
