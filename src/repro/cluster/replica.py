@@ -28,9 +28,11 @@ graphs cannot be merged).
 from __future__ import annotations
 
 import time
+from typing import Any
 
 from repro.cluster.manifest import read_manifest
 from repro.index import make_pipeline
+from repro.index.pipeline import DedupPipeline, QueryResult
 from repro.service.metrics import MetricsRegistry
 from repro.service.service import ServiceConfig, resolve_backend
 
@@ -56,7 +58,7 @@ class ReadReplica:
         self._last_refresh_t: float | None = None
         self.metrics = MetricsRegistry()
 
-    def _build(self):
+    def _build(self) -> DedupPipeline:
         return make_pipeline(self._key, cfg=self._fold, **self._opts)
 
     # ------------------------------------------------------------ refresh
@@ -96,7 +98,7 @@ class ReadReplica:
         return max(0, self.writer_epoch - self.epoch)
 
     # -------------------------------------------------------------- query
-    def query(self, tokens, lengths=None):
+    def query(self, tokens: Any, lengths: Any = None) -> QueryResult:
         """Read-only dup verdicts against the replica's current epoch."""
         t0 = time.perf_counter()
         out = self.pipeline.query(tokens, lengths)

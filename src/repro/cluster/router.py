@@ -18,11 +18,15 @@ in the protocol changes when the replicas move out of process.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import numpy as np
 
 from repro.cluster.replica import ReadReplica
 from repro.cluster.writer import DEFAULT_TENANT, ClusterConfig, ClusterWriter
+from repro.index.pipeline import QueryResult
 from repro.service.metrics import MetricsRegistry
+from repro.service.service import Ticket
 
 __all__ = ["DedupCluster"]
 
@@ -40,10 +44,11 @@ class DedupCluster:
         self._rr = 0
 
     # ------------------------------------------------------------- writes
-    def submit(self, docs, lengths=None, *, tenant: str = DEFAULT_TENANT):
+    def submit(self, docs: Any, lengths: Any = None, *,
+               tenant: str = DEFAULT_TENANT) -> Ticket:
         return self.writer.submit(docs, lengths, tenant=tenant)
 
-    def results(self, ticket):
+    def results(self, ticket: Ticket) -> Any:
         return self.writer.results(ticket)
 
     def publish(self, flush: bool = True) -> int:
@@ -70,7 +75,7 @@ class DedupCluster:
         return [r for r in self.replicas
                 if r.epoch > 0 and self.writer.epoch - r.epoch <= lag]
 
-    def query(self, tokens, lengths=None):
+    def query(self, tokens: Any, lengths: Any = None) -> QueryResult:
         """Route a read to a fresh-enough replica (round-robin); fall back
         to the writer's own index when none qualifies."""
         pool = self._eligible()

@@ -23,8 +23,11 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+from typing import Callable
 
 __all__ = ["TenantSpec", "TenantState", "TokenBucket"]
+
+Clock = Callable[[], float]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,7 +42,7 @@ class TokenBucket:
     """Continuous-refill token bucket (tokens = docs)."""
 
     def __init__(self, rate: float, burst: float | None = None,
-                 clock=time.perf_counter):
+                 clock: Clock = time.perf_counter):
         assert rate > 0, rate
         self.rate = float(rate)
         self.burst = float(burst if burst is not None else max(rate, 1.0))
@@ -70,7 +73,7 @@ class TokenBucket:
 class TenantState:
     """Runtime accounting for one tenant (writer-private)."""
 
-    def __init__(self, spec: TenantSpec, clock=time.perf_counter):
+    def __init__(self, spec: TenantSpec, clock: Clock = time.perf_counter):
         self.spec = spec
         self.bucket = (TokenBucket(spec.qps, spec.burst, clock)
                        if spec.qps else None)

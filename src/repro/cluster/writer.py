@@ -36,12 +36,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Any
 
 import numpy as np
 
 from repro.cluster.manifest import (ClusterManifest, publish_manifest,
                                     read_manifest)
-from repro.cluster.tenancy import TenantSpec, TenantState
+from repro.cluster.tenancy import Clock, TenantSpec, TenantState
+from repro.index.pipeline import QueryResult
 from repro.service.batcher import Backpressure
 from repro.service.service import DedupService, ServiceConfig, Ticket
 
@@ -71,7 +73,7 @@ class ClusterConfig:
 class ClusterWriter:
     """Admission owner: DedupService + manifest publication + tenancy."""
 
-    def __init__(self, cfg: ClusterConfig, clock=time.perf_counter):
+    def __init__(self, cfg: ClusterConfig, clock: Clock = time.perf_counter):
         self.cfg = cfg
         scfg = cfg.service
         if not scfg.snapshot_dir:
@@ -124,7 +126,7 @@ class ClusterWriter:
         self.service.outcome_hooks.append(self._on_outcome)
 
     # ------------------------------------------------------------- ingest
-    def submit(self, docs, lengths=None, *,
+    def submit(self, docs: Any, lengths: Any = None, *,
                tenant: str = DEFAULT_TENANT) -> Ticket:
         """Tenant-routed admission. Raises Backpressure (nothing enqueued)
         on a full queue or an over-rate tenant."""
@@ -175,7 +177,7 @@ class ClusterWriter:
                 del self._doc_tenant[did]
         return ticket
 
-    def results(self, ticket: Ticket):
+    def results(self, ticket: Ticket) -> Any:
         return self.service.results(ticket)
 
     def poll(self) -> None:
@@ -184,13 +186,13 @@ class ClusterWriter:
     def flush(self) -> None:
         self.service.flush()
 
-    def query(self, tokens, lengths=None):
+    def query(self, tokens: Any, lengths: Any = None) -> QueryResult:
         """Writer-local read path (the router's fallback when every
         replica is too stale)."""
         return self.service.pipeline.query(tokens, lengths)
 
     # ------------------------------------------------- outcome bookkeeping
-    def _on_outcome(self, out) -> None:
+    def _on_outcome(self, out: Any) -> None:
         mb = out.batch
         if self._budgeted:
             # exactly ONE slot-log record per materialized batch (the

@@ -6,6 +6,7 @@ online admission rule sequentially: a document is a duplicate iff some
 system in the paper approximates; used for recall evaluation in tests and
 benchmarks (on small corpora, as in Table 1).
 """
+# foldlint: module-sync-ok(offline oracle: the exact reference labeler is host-bound by definition)
 from __future__ import annotations
 
 import numpy as np

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,6 +28,16 @@ from repro.index.registry import register
 from repro.kernels import ops
 
 __all__ = ["HNSWBitmapBackend", "RawHNSWBackend"]
+
+
+@jax.jit
+def _live_count(node_level, dead):
+    """Admitted-minus-deleted occupancy as ONE cached device program.
+
+    The eager form (`jnp.sum((node_level >= 0) & ~dead)`) dispatched three
+    separate device ops per poll; the growth watermark and pipeline stats
+    poll this every batch, so keep it a single fused reduction."""
+    return jnp.sum((node_level >= 0) & ~dead, dtype=jnp.int32)
 
 
 class _HNSWLifecycle(DedupBackend):
@@ -48,8 +59,15 @@ class _HNSWLifecycle(DedupBackend):
     _known_count: int = 0
     _dispatched_bound: int = 0
 
-    # -- deletion state (protocol DELETION CONTRACT) -------------------------
+    # -- capability flags: every registered backend declares all four
+    # explicitly (foldlint F121) so a deleted/renamed flag is visible drift,
+    # not a silent fall-through to the protocol defaults
+    supports_growth = True
+    supports_snapshots = True
     supports_deletion = True
+    track_slots = False
+
+    # -- deletion state (protocol DELETION CONTRACT) -------------------------
     _n_deleted = 0        # cumulative successful deletes (process lifetime)
     _n_dead = 0           # live tombstones awaiting compact (host-exact)
     _t_compact = 0.0      # cumulative compact() wall seconds
@@ -97,9 +115,9 @@ class _HNSWLifecycle(DedupBackend):
         if self._known_count + self._dispatched_bound + fresh <= cap:
             self._dispatched_bound += fresh
             return
-        self._known_count = int(self.state.count)  # host sync (rare)
+        self._known_count = int(self.state.count)  # foldlint: sync-ok(rare re-anchor: only when the sync-free bound says the batch might not fit)
         self._dispatched_bound = 0
-        n_keep = int(np.asarray(keep).sum())
+        n_keep = int(np.asarray(keep).sum())  # foldlint: sync-ok(already syncing to re-anchor; exact kept count is free here)
         fresh = max(0, n_keep - offered)
         if self._known_count + fresh > cap:
             raise RuntimeError(
@@ -131,8 +149,8 @@ class _HNSWLifecycle(DedupBackend):
         occupancy) therefore sees reclaimed space; the overflow guard keeps
         its own HIGH-WATER anchor because dead slots still hold capacity
         until compact() free-lists them."""
-        return int(jnp.sum((self.state.node_level >= 0)
-                           & ~self.state.dead, dtype=jnp.int32))
+        return int(_live_count(self.state.node_level,  # foldlint: sync-ok(occupancy poll; one fused cached program)
+                               self.state.dead))
 
     # -- deletion / compaction (protocol DELETION CONTRACT) ------------------
     @property
@@ -144,7 +162,7 @@ class _HNSWLifecycle(DedupBackend):
         # host-exact tombstone counter: no device sync (polled every batch)
         return self._n_dead / max(self.hnsw_cfg.capacity, 1)
 
-    def delete(self, ids) -> int:
+    def delete(self, ids) -> int:  # foldlint: cold-path
         """Tombstone slot ids (idempotent; see protocol.py). The device
         delete is O(D); slots become reusable only after compact()."""
         ids = np.unique(np.asarray(ids, np.int64).reshape(-1))
@@ -162,7 +180,7 @@ class _HNSWLifecycle(DedupBackend):
         self._n_dead += n
         return n
 
-    def compact(self) -> dict:
+    def compact(self) -> dict:  # foldlint: cold-path
         """Repair adjacency around tombstones, unlink them, and re-derive
         the host free list from the device state (host sync — callers
         schedule this off the hot path, e.g. repro.lifecycle's watermark)."""
@@ -209,12 +227,12 @@ class _HNSWLifecycle(DedupBackend):
 
         Host-syncs `keep`; the count mirror syncs once (first logged
         insert / after restore or compact) and is advanced host-side."""
-        order = np.flatnonzero(np.asarray(keep))
+        order = np.flatnonzero(np.asarray(keep))  # foldlint: sync-ok(slot logging is opt-in; lifecycle needs the host mask)
         if self._count_hw is None:
-            self._count_hw = int(self.state.count)      # one-time sync
+            self._count_hw = int(self.state.count)  # foldlint: sync-ok(one-time count-mirror seed; advanced host-side after)
         t = min(len(order), len(free_host))
         slots = np.concatenate([
-            np.asarray(free_host[:t], np.int64),
+            np.asarray(free_host[:t], np.int64),  # foldlint: sync-ok(host free-list bookkeeping)
             self._count_hw + np.arange(len(order) - t, dtype=np.int64),
         ]).astype(np.int32)
         self._count_hw += len(order) - t
@@ -230,7 +248,7 @@ class _HNSWLifecycle(DedupBackend):
             return
         order, slots = self._log_slots(keep, free_host)
         if sig_store is not None:
-            sig_store[slots] = np.asarray(sig.sigs)[order]
+            sig_store[slots] = np.asarray(sig.sigs)[order]  # foldlint: sync-ok(exact-verify sig store is host-resident by design)
         if self.track_slots:
             q = list(getattr(self, "_slots_q", []))
             q.append(slots)
@@ -251,7 +269,7 @@ class _HNSWLifecycle(DedupBackend):
         pass
 
     # -- lifecycle -----------------------------------------------------------
-    def grow(self, new_capacity: int) -> None:
+    def grow(self, new_capacity: int) -> None:  # foldlint: cold-path
         """Re-pad the index to a larger capacity (graph preserved exactly).
 
         Recompiles search/insert once per growth; the geometric growth
@@ -267,7 +285,7 @@ class _HNSWLifecycle(DedupBackend):
         self._known_count = int(self.state.count)
         self._dispatched_bound = 0
 
-    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+    def save(self, ckpt_dir: str, step: int, async_write: bool = False):  # foldlint: cold-path
         """Checkpoint the evolving index (HNSWState is a pytree).
 
         async_write=True snapshots to host synchronously and writes in a
@@ -281,7 +299,7 @@ class _HNSWLifecycle(DedupBackend):
         writer(ckpt_dir, step, tree,
                extra={"capacity": self.hnsw_cfg.capacity})
 
-    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:  # foldlint: cold-path
         from repro.train import checkpoint as ckpt
         step = ckpt.latest_step(ckpt_dir) if step is None else step
         if step is None:     # a bare assert would vanish under python -O
@@ -382,8 +400,8 @@ class HNSWBitmapBackend(_HNSWLifecycle):
         if self.cfg.verify_minhash:
             # rescore the k candidates with exact lane agreement (host
             # sync: reads ids + the numpy signature store)
-            cand = self._sig_store[np.maximum(np.asarray(ids), 0)]  # (B,k,H)
-            lane = (np.asarray(sig.sigs)[:, None, :] == cand).mean(-1)
+            cand = self._sig_store[np.maximum(np.asarray(ids), 0)]  # foldlint: sync-ok(opt-in exact verify reads the host sig store)
+            lane = (np.asarray(sig.sigs)[:, None, :] == cand).mean(-1)  # foldlint: sync-ok(opt-in exact verify reads the host sig store)
             sims = jnp.where(jnp.asarray(ids) >= 0,
                              jnp.asarray(lane, jnp.float32), -jnp.inf)
         return ids, sims
@@ -423,7 +441,7 @@ class HNSWBitmapBackend(_HNSWLifecycle):
             return {}
         return {"sig_store": jnp.asarray(self._sig_store)}
 
-    def _take_extra(self, got: dict) -> None:
+    def _take_extra(self, got: dict) -> None:  # foldlint: cold-path (restore hook)
         if self._sig_store is not None:
             self._sig_store = np.asarray(got["sig_store"])
 

@@ -23,7 +23,12 @@ Band/row counts are calibrated to tau via the S-curve (H=112, tau=0.7 →
 14 bands × 8 rows, threshold ≈ 0.72). Verification is vectorized numpy over
 the candidate set (the paper also SIMD-accelerates DPK's verification for
 fairness — same spirit).
+
+Both backends are HOST-SIDE by design: stores, buckets, and verification
+are numpy/dict structures (only the pairwise verification kernel touches
+the device), so foldlint's hot-path sync rules don't apply here.
 """
+# foldlint: module-sync-ok(host-side backend: search/insert operate on numpy stores and python dict buckets by design)
 from __future__ import annotations
 
 from collections import defaultdict
@@ -49,6 +54,13 @@ class _BandedLSHBase(DedupBackend):
     rows to free, mirroring how a Bloom-style filter cannot un-insert)."""
 
     order = BATCH_FIRST
+    # capability flags: declared explicitly on every registered backend
+    # (foldlint F121) — host-side stores grow/snapshot fine; only FlatLSH
+    # layers deletion on top
+    supports_growth = True
+    supports_snapshots = True
+    supports_deletion = False
+    track_slots = False
     _free_mask: np.ndarray | None = None
 
     def __init__(self, cfg: FoldConfig):

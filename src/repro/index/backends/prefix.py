@@ -31,12 +31,19 @@ from repro.index.registry import register
 
 __all__ = ["PrefixFilterBackend"]
 
+# foldlint: module-sync-ok(host-side backend: prefix-filter join over python sets/dicts by design)
 _PAD = 0xFFFFFFFF     # shingle_hashes padding sentinel
 
 
 class PrefixFilterBackend(DedupBackend):
     name = "prefix_filter"
     order = INDEX_FIRST
+    # capability flags: declared explicitly on every registered backend
+    # (foldlint F121); the join store is host-side and append-only
+    supports_growth = True
+    supports_snapshots = True
+    supports_deletion = False
+    track_slots = False
 
     def __init__(self, cfg: FoldConfig):
         self.cfg = cfg

@@ -66,12 +66,21 @@ from repro.index.registry import register
 __all__ = ["ShardedDedupBackend"]
 
 
+@jax.jit
+def _live_count(node_level, dead):
+    """All-shard admitted-minus-deleted occupancy as ONE cached device
+    program (the eager form dispatched three ops per poll; the growth
+    watermark polls this every batch)."""
+    return jnp.sum((node_level >= 0) & ~dead, dtype=jnp.int32)
+
+
 class ShardedDedupBackend(DedupBackend):
     name = "hnsw_sharded"
     order = BATCH_FIRST      # nominal; the fused step owns the ordering
     supports_growth = True
     supports_snapshots = True
     supports_deletion = True
+    track_slots = False
 
     def __init__(self, cfg: FoldConfig, shards: int | None = None,
                  mesh=None, axis: str = "data"):
@@ -136,8 +145,8 @@ class ShardedDedupBackend(DedupBackend):
     @property
     def inserted(self) -> int:
         """LIVE document count across all shards (host sync)."""
-        return int(jnp.sum((self.states.node_level >= 0)
-                           & ~self.states.dead, dtype=jnp.int32))
+        return int(_live_count(self.states.node_level,  # foldlint: sync-ok(occupancy poll; one fused cached program)
+                               self.states.dead))
 
     # -- slot-id encoding ----------------------------------------------------
     # global slot id = local_slot * nshards + shard: stable under grow()
@@ -161,7 +170,7 @@ class ShardedDedupBackend(DedupBackend):
         if self._known_max + self._bound + fresh <= cap:
             self._bound += fresh
             return
-        self._known_max = int(jnp.max(self.states.count))   # host sync
+        self._known_max = int(jnp.max(self.states.count))  # foldlint: sync-ok(rare re-anchor: only when the sync-free bound says the batch might not fit)
         self._bound = 0
         if self._known_max + fresh > cap:
             raise RuntimeError(
@@ -182,7 +191,7 @@ class ShardedDedupBackend(DedupBackend):
         offered frees first, then fresh slots from its high-water count.
         Syncs `keep` — only called while track_slots is on. The count
         mirror is seeded from the PRE-insert device state in fused_step."""
-        order = np.flatnonzero(np.asarray(keep))
+        order = np.flatnonzero(np.asarray(keep))  # foldlint: sync-ok(slot logging is opt-in; lifecycle needs the host mask)
         taken = [0] * self.nshards
         slots = np.empty(len(order), np.int64)
         for j, r in enumerate(order):
@@ -216,14 +225,14 @@ class ShardedDedupBackend(DedupBackend):
         if pad:
             bitmaps = jnp.pad(bitmaps, ((0, pad), (0, 0)))
             pcs = jnp.pad(pcs, (0, pad))
-            valid = np.pad(np.asarray(valid), (0, pad))
+            valid = np.pad(np.asarray(valid), (0, pad))  # foldlint: sync-ok(valid is host numpy by contract; pad before device upload)
         levels = jnp.asarray(sample_levels(
             B + pad, self.hnsw_cfg, seed=self._batches + self.cfg.seed + 1))
         self._batches += 1
         if self.track_slots and self._count_hw is None:
             # one-time sync of the per-shard high-water mirror, BEFORE the
             # step so this batch's own inserts are not double-counted
-            self._count_hw = np.asarray(self.states.count).copy()
+            self._count_hw = np.asarray(self.states.count).copy()  # foldlint: sync-ok(one-time count-mirror seed; advanced host-side after)
         self.states, keep, keep_in = self._step(
             self.states, bitmaps, pcs, levels, jnp.asarray(valid),
             jnp.asarray(frees))
@@ -268,7 +277,7 @@ class ShardedDedupBackend(DedupBackend):
         # host-exact tombstone counter: no device sync (polled every batch)
         return self._n_dead / max(self.capacity, 1)
 
-    def delete(self, ids) -> int:
+    def delete(self, ids) -> int:  # foldlint: cold-path
         """Tombstone global slot ids, each routed to its owning shard
         (id % nshards) and tombstoned locally inside one shard_map program.
         Idempotent; slots become reusable only after compact()."""
@@ -291,7 +300,7 @@ class ShardedDedupBackend(DedupBackend):
         self._n_dead += n
         return n
 
-    def compact(self) -> dict:
+    def compact(self) -> dict:  # foldlint: cold-path
         """Repair every sub-graph's adjacency around its tombstones, unlink
         them, and re-derive the per-shard host free lists from the device
         state (host sync — callers schedule this off the hot path)."""
@@ -313,7 +322,7 @@ class ShardedDedupBackend(DedupBackend):
                 "t_compact": self._t_compact}
 
     # -- lifecycle -----------------------------------------------------------
-    def grow(self, new_capacity: int) -> None:
+    def grow(self, new_capacity: int) -> None:  # foldlint: cold-path
         """Re-pad every shard to ceil(new_capacity/nshards) per-shard slots
         (graphs preserved exactly) and re-lower the fused step.
 
@@ -332,7 +341,7 @@ class ShardedDedupBackend(DedupBackend):
         self._known_max = int(jnp.max(self.states.count))
         self._bound = 0
 
-    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+    def save(self, ckpt_dir: str, step: int, async_write: bool = False):  # foldlint: cold-path
         """One coordinated snapshot: the stacked per-shard HNSW arrays
         (gathered to host by the checkpoint layer — storage is device-count
         independent) plus the shard-layout manifest."""
@@ -343,7 +352,7 @@ class ShardedDedupBackend(DedupBackend):
                extra={"capacity": self.hnsw_cfg.capacity,
                       "shards": self.nshards, "axis": self.axis})
 
-    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:  # foldlint: cold-path
         """Restore a coordinated snapshot onto this backend's mesh.
 
         Shard-layout rules: a snapshot taken at N shards restores exactly

@@ -20,14 +20,17 @@ from __future__ import annotations
 import functools
 import inspect
 import time
-from typing import Any, NamedTuple
+from typing import TYPE_CHECKING, Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.protocol import (BATCH_FIRST, INDEX_FIRST, SigBatch,
-                                  StepResult)
+from repro.index.protocol import (BATCH_FIRST, INDEX_FIRST, DedupBackend,
+                                  SigBatch, StepResult)
+
+if TYPE_CHECKING:
+    from repro.index.exact import ExactDupFilter
 
 __all__ = ["DedupPipeline", "QueryResult", "greedy_leader",
            "greedy_leader_split"]
@@ -49,7 +52,8 @@ class QueryResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("tau",))
-def _greedy_sweep(sim: jnp.ndarray, tau: float, eligible: jnp.ndarray):
+def _greedy_sweep(sim: jnp.ndarray, tau: float,
+                  eligible: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact sequential greedy-leader over a (B, B) similarity matrix.
 
     keep[i] = eligible[i] and no kept j < i with sim[i, j] >= tau;
@@ -68,7 +72,8 @@ def _greedy_sweep(sim: jnp.ndarray, tau: float, eligible: jnp.ndarray):
     return jax.lax.fori_loop(0, B, body, init)
 
 
-def greedy_leader(sim, tau: float, eligible=None) -> jnp.ndarray:
+def greedy_leader(sim: Any, tau: float,
+                  eligible: Any = None) -> jnp.ndarray:
     """Step ②: keep-mask for in-batch dedup (public since PR 2).
 
     eligible (B,) bool — docs that may be kept at all; ineligible docs are
@@ -77,7 +82,9 @@ def greedy_leader(sim, tau: float, eligible=None) -> jnp.ndarray:
     return greedy_leader_split(sim, tau, eligible)[0]
 
 
-def greedy_leader_split(sim, tau: float, eligible=None):
+def greedy_leader_split(sim: Any, tau: float,
+                        eligible: Any = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """greedy_leader plus the in-batch-duplicate flag: (keep, batch_hit)."""
     sim = jnp.asarray(sim)
     if eligible is None:
@@ -85,7 +92,7 @@ def greedy_leader_split(sim, tau: float, eligible=None):
     return _greedy_sweep(sim, float(tau), jnp.asarray(eligible))
 
 
-def _ready(x) -> None:
+def _ready(x: Any) -> None:
     """Block on a device array; no-op for host (numpy) results."""
     if hasattr(x, "block_until_ready"):
         x.block_until_ready()
@@ -100,7 +107,7 @@ class DedupPipeline:
     backend, so the serving layer's growth watermark and snapshot rotation
     work for every registered backend."""
 
-    def __init__(self, backend):
+    def __init__(self, backend: DedupBackend):
         # deferred: repro.core's package init imports repro.index (the
         # FoldPipeline re-export), so core modules load lazily here
         from repro.core.hashing import hash_seeds
@@ -123,7 +130,7 @@ class DedupPipeline:
         # the shared config's exact_filter flag; None when off. The filter
         # is consulted by process_batch/query here and by the service's
         # submit-time front door — same object, shared state.
-        self.exact = None
+        self.exact: "Optional[ExactDupFilter]" = None
         if getattr(getattr(backend, "cfg", None), "exact_filter", False):
             from repro.index.exact import ExactDupFilter
             self.exact = ExactDupFilter()
@@ -137,7 +144,7 @@ class DedupPipeline:
     def inserted(self) -> int:
         return self.backend.inserted
 
-    def grow(self, new_capacity: int):
+    def grow(self, new_capacity: int) -> "DedupPipeline":
         self.backend.grow(new_capacity)
         return self
 
@@ -153,7 +160,7 @@ class DedupPipeline:
     def dead_fraction(self) -> float:
         return getattr(self.backend, "dead_fraction", 0.0)
 
-    def delete(self, ids) -> int:
+    def delete(self, ids: Any) -> int:
         fn = getattr(self.backend, "delete", None)
         if fn is None:
             raise NotImplementedError(
@@ -165,7 +172,8 @@ class DedupPipeline:
         fn = getattr(self.backend, "compact", None)
         return fn() if fn is not None else {"reclaimed": 0}
 
-    def save(self, ckpt_dir: str, step: int, async_write: bool = False):
+    def save(self, ckpt_dir: str, step: int,
+             async_write: bool = False) -> None:
         self.backend.save(ckpt_dir, step, async_write=async_write)
         if self.exact is not None:
             # sidecar is host-cheap and loss-safe (the fuzzy path backstops
@@ -186,7 +194,7 @@ class DedupPipeline:
                  "count") + extra + tuple(self.backend.stats_schema()))
 
     # -- step ① -------------------------------------------------------------
-    def signatures(self, tokens, lengths) -> SigBatch:
+    def signatures(self, tokens: Any, lengths: Any) -> SigBatch:
         """shingle → (MinHash → bitmap) per the backend's SigSpec.
 
         Dispatches device work and returns immediately (arrays are futures
@@ -206,14 +214,14 @@ class DedupPipeline:
         return SigBatch(sigs=sigs, bitmaps=bitmaps, pcs=pcs,
                         shingles=sh if "shingles" in spec.needs else None)
 
-    def _insert(self, sig: SigBatch, keep, search_ids):
+    def _insert(self, sig: SigBatch, keep: Any, search_ids: Any) -> Any:
         """Step ⑤ with the extended search-reuse contract (see protocol)."""
         if self._insert_takes_search_ids:
             return self.backend.insert(sig, keep, search_ids=search_ids)
         return self.backend.insert(sig, keep)
 
     # -- steps ②-⑤ ----------------------------------------------------------
-    def dedup_step(self, sig: SigBatch, valid=None,
+    def dedup_step(self, sig: SigBatch, valid: Any = None,
                    timers: dict[str, Any] | None = None) -> StepResult:
         """In-batch cleanup, index search, threshold filter, admit uniques.
 
@@ -246,7 +254,8 @@ class DedupPipeline:
         assert be.order == INDEX_FIRST, be.order
         return self._step_index_first(sig, valid, timers)
 
-    def _step_batch_first(self, sig, valid, timers) -> StepResult:
+    def _step_batch_first(self, sig: SigBatch, valid: Any,
+                          timers: dict[str, Any] | None) -> StepResult:
         be = self.backend
         block = timers is not None
 
@@ -276,7 +285,8 @@ class DedupPipeline:
         return StepResult(keep=keep, keep_in_batch=keep_in_batch,
                           ids=ids, sims=sims)
 
-    def _step_index_first(self, sig, valid, timers) -> StepResult:
+    def _step_index_first(self, sig: SigBatch, valid: Any,
+                          timers: dict[str, Any] | None) -> StepResult:
         be = self.backend
         block = timers is not None
 
@@ -309,7 +319,8 @@ class DedupPipeline:
         return StepResult(keep=keep, keep_in_batch=~np.asarray(hit),
                           ids=ids, sims=sims)
 
-    def _exact_hits(self, tokens, lengths):
+    def _exact_hits(self, tokens: Any, lengths: Any
+                    ) -> Tuple[Any, np.ndarray, np.ndarray]:
         """(hashes, hit, refs) for the exact front door; hit marks rows
         whose content hash is already in the filter OR appeared earlier in
         this batch (same hash → same signature → same eventual verdict, so
@@ -331,7 +342,8 @@ class DedupPipeline:
                 seen.add(h)
         return hashes, hit, refs
 
-    def process_batch(self, tokens, lengths) -> tuple[np.ndarray, dict]:
+    def process_batch(self, tokens: Any,
+                      lengths: Any) -> tuple[np.ndarray, dict]:
         """Dedup one incoming batch. Returns (keep_mask (B,), stats).
 
         Blocking composition of the two stage functions; per-stage timing
@@ -392,7 +404,7 @@ class DedupPipeline:
         return keep, stats
 
     # -- read-only query (the replica / router surface) ---------------------
-    def query(self, tokens, lengths=None) -> QueryResult:
+    def query(self, tokens: Any, lengths: Any = None) -> QueryResult:
         """Search-only "is this a dup?" verdicts — NOTHING is inserted.
 
         This is the read-replica serving surface (repro.cluster): exact

@@ -250,7 +250,7 @@ class DedupBackend(Protocol):
     def dead_fraction(self) -> float:
         return 0.0
 
-    def delete(self, ids) -> int:
+    def delete(self, ids: Any) -> int:
         raise NotImplementedError(
             f"backend {getattr(self, 'name', type(self).__name__)!r} does "
             f"not support deletion (supports_deletion=False)")
@@ -259,10 +259,14 @@ class DedupBackend(Protocol):
         return {"reclaimed": 0}
 
     def pop_slot_log(self, n: int | None = None) -> list:
+        # _slots_q is an implementation detail of track_slots backends, not
+        # part of the structural protocol — hence getattr/setattr rather
+        # than a declared member (declaring it would force every backend to
+        # carry the attribute to pass isinstance with runtime_checkable)
         q = getattr(self, "_slots_q", None)
         if not q:
             return []
         n = len(q) if n is None else min(n, len(q))
         out, rest = list(q[:n]), list(q[n:])
-        self._slots_q = rest
+        setattr(self, "_slots_q", rest)
         return out

@@ -14,28 +14,46 @@ registers at import time:
         return MyBackend(cfg, **opts)
 
     pipe = ix.make_pipeline("my_backend", cfg=FoldConfig(tau=0.8))
+
+The accepted option set is always DERIVED from the live factory signature
+(see `accepted_opts`) — there is no hand-maintained allowlist to drift out
+of sync, and foldlint's F131/F132 rules statically re-check the same
+derivation at lint time.
 """
 from __future__ import annotations
 
 import importlib
 import inspect
-from typing import Callable
+from typing import TYPE_CHECKING, Any, Callable, Dict, Mapping, Optional, Tuple
+
+if TYPE_CHECKING:
+    from repro.core.dedup import FoldConfig
+    from repro.index.pipeline import DedupPipeline
+    from repro.index.protocol import DedupBackend
 
 __all__ = ["register", "make", "make_pipeline", "available",
            "accepted_opts", "validate_opts"]
 
-_REGISTRY: dict[str, Callable] = {}
+Factory = Callable[..., "DedupBackend"]
+
+_REGISTRY: Dict[str, Factory] = {}
+# signature-derived accepted_opts, memoised per key; register() invalidates
+# so a re-registered factory (tests, plugins shadowing built-ins) is
+# reflected immediately rather than serving the stale set
+_OPTS_CACHE: Dict[str, Tuple[str, ...]] = {}
 _BUILTINS_LOADED = False
 
 
-def register(name: str, factory: Callable | None = None):
+def register(name: str,
+             factory: Optional[Factory] = None) -> Any:
     """Register a backend factory under `name` (decorator or direct call).
 
     The factory signature is `factory(cfg: FoldConfig | None, **opts) ->
     DedupBackend`. Re-registering a name overwrites (last wins), so tests
     and plugins can shadow built-ins."""
-    def _do(f: Callable):
+    def _do(f: Factory) -> Factory:
         _REGISTRY[name] = f
+        _OPTS_CACHE.pop(name, None)
         return f
     return _do(factory) if factory is not None else _do
 
@@ -49,26 +67,35 @@ def _ensure_builtins() -> None:
         importlib.import_module("repro.index.backends")
 
 
-def available() -> tuple[str, ...]:
+def _lookup(name: str) -> Factory:
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown dedup backend {name!r}; "
+                       f"registered: {', '.join(available())}") from None
+
+
+def available() -> Tuple[str, ...]:
     """Registered backend keys, sorted."""
     _ensure_builtins()
     return tuple(sorted(_REGISTRY))
 
 
-def accepted_opts(name: str) -> tuple[str, ...]:
+def accepted_opts(name: str) -> Tuple[str, ...]:
     """Keyword options the backend's factory accepts, sorted.
 
     Named parameters of the registered factory (minus the positional
     `cfg`); when the factory takes **opts it forwards them into
     `dataclasses.replace` on the shared FoldConfig (the hnsw/hnsw_raw
-    convention), so the config's field names are accepted too."""
-    _ensure_builtins()
-    try:
-        factory = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown dedup backend {name!r}; "
-                       f"registered: {', '.join(available())}") from None
-    keys: set[str] = set()
+    convention), so the config's field names are accepted too. Derived
+    from `inspect.signature` on every (cache-miss) call — the set can
+    never diverge from the factory it describes."""
+    factory = _lookup(name)
+    cached = _OPTS_CACHE.get(name)
+    if cached is not None:
+        return cached
+    keys: set = set()
     var_kw = False
     try:
         params = inspect.signature(factory).parameters
@@ -86,10 +113,12 @@ def accepted_opts(name: str) -> tuple[str, ...]:
 
         from repro.core.dedup import FoldConfig
         keys.update(f.name for f in dataclasses.fields(FoldConfig))
-    return tuple(sorted(keys))
+    out = tuple(sorted(keys))
+    _OPTS_CACHE[name] = out
+    return out
 
 
-def validate_opts(name: str, opts: dict) -> None:
+def validate_opts(name: str, opts: Mapping[str, Any]) -> None:
     """Raise ValueError naming unknown keys in `opts` (and listing the
     accepted ones) instead of letting the factory silently ignore them.
 
@@ -104,18 +133,14 @@ def validate_opts(name: str, opts: dict) -> None:
             f"accepted keys: {', '.join(accepted) or '(none)'}")
 
 
-def make(name: str, cfg=None, **opts):
+def make(name: str, cfg: "Optional[FoldConfig]" = None,
+         **opts: Any) -> "DedupBackend":
     """Instantiate the backend registered under `name`."""
-    _ensure_builtins()
-    try:
-        factory = _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown dedup backend {name!r}; "
-                       f"registered: {', '.join(available())}") from None
-    return factory(cfg, **opts)
+    return _lookup(name)(cfg, **opts)
 
 
-def make_pipeline(name: str, cfg=None, **opts):
+def make_pipeline(name: str, cfg: "Optional[FoldConfig]" = None,
+                  **opts: Any) -> "DedupPipeline":
     """`make` + wrap in the generic DedupPipeline (the usual entry point)."""
     from repro.index.pipeline import DedupPipeline
     return DedupPipeline(make(name, cfg, **opts))

@@ -131,7 +131,7 @@ class MicroBatcher:
             self.rejected += 1
             raise Backpressure("queue_full",
                                retry_after_s=self.max_wait_ms / 1e3)
-        tokens = np.asarray(tokens)
+        tokens = np.asarray(tokens)  # foldlint: sync-ok(host ingress: tickets arrive as host token arrays by contract)
         cap = self.len_buckets[-1]
         if len(tokens) > cap:
             tokens = tokens[:cap]

@@ -1,0 +1,5 @@
+# Deliberately-broken (and matching clean) snippets for foldlint's own
+# tests. This directory is EXCLUDED from normal lint runs (see
+# DEFAULT_EXCLUDES in tools/foldlint/__init__.py); tests/test_foldlint.py
+# lints each file individually with default_excludes=False and asserts the
+# `# EXPECT-F1xx` markers against the findings.

@@ -1,0 +1,15 @@
+"""F14x bad fixture: string-keyed plumbing that names fields the config
+dataclass does not have. Never imported — AST only."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FixtureConfig:
+    alpha: float = 0.5
+    capacity: int = 1024
+
+
+def build(**kw):
+    cfg = FixtureConfig(zeta=3)                     # EXPECT-F141
+    cfg = dataclasses.replace(cfg, omega=1)         # EXPECT-F142
+    return getattr(cfg, "gamma", None)              # EXPECT-F142

@@ -1,0 +1,15 @@
+"""F14x clean fixture: every string key names a live field.
+Never imported — AST only."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FixtureGoodConfig:
+    alpha: float = 0.5
+    capacity: int = 1024
+
+
+def build(**kw):
+    cfg = FixtureGoodConfig(alpha=0.9)
+    cfg = dataclasses.replace(cfg, capacity=2048)
+    return getattr(cfg, "alpha", None)

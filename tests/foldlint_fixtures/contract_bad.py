@@ -1,0 +1,60 @@
+"""F12x bad fixture: a registered backend whose capability flags and
+implemented surface disagree with index/protocol.py in every way the
+contract rules check. Never imported — AST only."""
+from repro.index.registry import register
+
+
+class BadContractBackend:                           # EXPECT-F121 EXPECT-F121 EXPECT-F123 EXPECT-F124 EXPECT-F125 EXPECT-F126 EXPECT-F127 EXPECT-F127
+    # supports_growth / supports_snapshots not declared -> F121 x2, and
+    # their protocol defaults (True) demand grow/save/restore -> F127 x2
+    supports_deletion = True      # ...but no delete()          -> F123
+    track_slots = True            # ...but no pop_slot_log()    -> F126
+
+    def fused_step(self, sig, valid=None):          # no search() -> F124
+        return None
+
+    # name/order/taus/insert/batch_sim/stats... all missing     -> F125
+
+
+class DeadDeleteBackend:
+    supports_growth = False
+    supports_snapshots = False
+    supports_deletion = False
+    track_slots = False
+    name = "fixture_dead_delete"
+    order = "batch_first"
+
+    def __init__(self, cfg):
+        self.sig_spec = None
+        self.tau_batch = 0.7
+        self.tau_index = 0.7
+        self.capacity = 0
+        self.inserted = 0
+
+    def batch_sim(self, sig):
+        return None
+
+    def search(self, sig):
+        return None, None
+
+    def insert(self, sig, keep, search_ids=None):
+        return None
+
+    def stats_schema(self):
+        return ()
+
+    def stats(self):
+        return {}
+
+    def delete(self, ids):                          # EXPECT-F122
+        return 0
+
+
+@register("fixture_bad_contract")
+def _make_bad_contract(cfg):
+    return BadContractBackend()
+
+
+@register("fixture_dead_delete")
+def _make_dead_delete(cfg):
+    return DeadDeleteBackend(cfg)

@@ -1,0 +1,56 @@
+"""F12x clean fixture: a registered backend declaring every capability
+flag explicitly, with an implementation surface that matches the flags.
+Never imported — AST only."""
+from repro.index.registry import register
+
+
+class GoodContractBackend:
+    name = "fixture_good_contract"
+    order = "batch_first"
+    supports_growth = True
+    supports_snapshots = True
+    supports_deletion = True
+    track_slots = False
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.sig_spec = None
+        self.tau_batch = 0.7
+        self.tau_index = 0.7
+        self.capacity = 0
+        self.inserted = 0
+
+    def batch_sim(self, sig):
+        return None
+
+    def search(self, sig):
+        return None, None
+
+    def fused_step(self, sig, valid=None):          # fused AND searchable
+        return None
+
+    def insert(self, sig, keep, search_ids=None):
+        return None
+
+    def delete(self, ids):
+        return 0
+
+    def grow(self, new_capacity):
+        return None
+
+    def save(self, ckpt_dir, step, async_write=False):
+        return None
+
+    def restore(self, ckpt_dir, step=None):
+        return 0
+
+    def stats_schema(self):
+        return ()
+
+    def stats(self):
+        return {}
+
+
+@register("fixture_good_contract")
+def _make_good_contract(cfg):
+    return GoodContractBackend(cfg)

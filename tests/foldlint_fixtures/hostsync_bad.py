@@ -1,0 +1,15 @@
+# foldlint: hot-path
+"""F10x bad fixture: naked host syncs in a (pragma-forced) hot module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def admission_step(state, sigs):
+    sims = jnp.dot(sigs, state.vectors.T)
+    best = sims.max(axis=1)
+    count = state.count.item()                      # EXPECT-F101
+    jax.block_until_ready(best)                     # EXPECT-F101
+    host_best = np.asarray(best)                    # EXPECT-F103
+    n_admitted = int(jnp.sum(best > 0.7))           # EXPECT-F102
+    return host_best, count + n_admitted

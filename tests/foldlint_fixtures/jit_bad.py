@@ -1,0 +1,34 @@
+"""F11x bad fixture: per-iteration jit, traced-bool branch, and a
+donated buffer read after donation."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def score(x):
+    return x * 2
+
+
+def rescore_all(batches):
+    out = []
+    for b in batches:
+        f = jax.jit(score)                          # EXPECT-F111
+        out.append(f(b))
+    return out
+
+
+def admit(sims):
+    if jnp.any(sims > 0.7):                         # EXPECT-F112
+        return True
+    return False
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def commit(cfg, state):
+    return state + 1
+
+
+def step(cfg, state):
+    out = commit(cfg, state)
+    return out + state                              # EXPECT-F113

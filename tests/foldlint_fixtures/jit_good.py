@@ -1,0 +1,27 @@
+"""F11x clean fixture: module-level jit, device-side select, and the
+idiomatic rebinding of a donated argument."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_score = jax.jit(lambda x: x * 2)          # constructed once, reused
+
+
+def rescore_all(batches):
+    return [_score(b) for b in batches]
+
+
+def admit(sims):
+    # the predicate stays on device; no Python branch on a traced bool
+    return jnp.where(jnp.any(sims > 0.7), 1, 0)
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def commit(cfg, state):
+    return state + 1
+
+
+def step(cfg, state):
+    state = commit(cfg, state)             # donated arg rebound: fine
+    return state + 1

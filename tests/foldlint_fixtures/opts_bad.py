@@ -1,0 +1,27 @@
+"""F13x bad fixture: a call site passing an opt the factory doesn't
+accept, and a factory swallowing **opts without forwarding them.
+Never imported — AST only."""
+from repro.index.registry import make_pipeline, register
+
+
+class _OptsBackend:
+    name = "fixture_opts"
+    order = "batch_first"
+    supports_growth = False
+    supports_snapshots = False
+    supports_deletion = False
+    track_slots = False
+
+
+@register("fixture_opts")
+def _make_opts(cfg, alpha: int = 1):
+    return _OptsBackend()
+
+
+@register("fixture_swallow")
+def _make_swallow(cfg, **opts):                     # EXPECT-F132
+    return _OptsBackend()                           # opts never forwarded
+
+
+def build():
+    return make_pipeline("fixture_opts", beta=2)    # EXPECT-F131

@@ -1,0 +1,25 @@
+"""F13x clean fixture: opts match the factory signature; **opts are
+forwarded. Never imported — AST only."""
+from repro.index.registry import make_pipeline, register
+
+
+class _OptsBackendG:
+    name = "fixture_opts_good"
+    order = "batch_first"
+    supports_growth = False
+    supports_snapshots = False
+    supports_deletion = False
+    track_slots = False
+
+    def __init__(self, **kw):
+        self.kw = kw
+
+
+@register("fixture_opts_good")
+def _make_opts_good(cfg, alpha: int = 1, **opts):
+    return _OptsBackendG(alpha=alpha, **opts)       # forwarded: no F132
+
+
+def build():
+    # `alpha` is a named param; `tau` is accepted via **opts -> FoldConfig
+    return make_pipeline("fixture_opts_good", alpha=2, tau=0.8)

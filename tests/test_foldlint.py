@@ -1,0 +1,156 @@
+"""foldlint's own battery: every rule family fires on its known-bad
+fixture (exact rule ids + lines, from the `# EXPECT-F1xx` markers),
+stays silent on the matching clean fixture, and the REAL tree lints
+clean — so a regression in either the codebase or the linter itself
+fails tier-1, not just the CI lint lane.
+
+Also covers satellite (2): `registry.accepted_opts` must keep deriving
+from the live factory signature (re-registering a factory with a
+different signature is immediately reflected; the cache never serves a
+stale set).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from collections import Counter
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from foldlint import RULE_DOCS, lint_paths  # noqa: E402
+
+FIXTURES = ROOT / "tests" / "foldlint_fixtures"
+
+# each fixture pair is linted under its family's rule selection only —
+# bad-fixture backends are deliberately skeletal and would (correctly)
+# trip *other* families too
+FAMILIES = {
+    "hostsync": {"F101", "F102", "F103"},
+    "jit": {"F111", "F112", "F113"},
+    "contract": {"F121", "F122", "F123", "F124", "F125", "F126", "F127"},
+    "opts": {"F131", "F132"},
+    "configdrift": {"F141", "F142"},
+}
+
+_EXPECT = re.compile(r"EXPECT-(F\d{3})")
+
+
+def _expected(path: Path) -> Counter:
+    out: Counter = Counter()
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        for rule in _EXPECT.findall(line):
+            out[(rule, i)] += 1
+    return out
+
+
+def _lint(path: Path, select) -> list:
+    return lint_paths([path], project_root=ROOT, select=select,
+                      default_excludes=False)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_bad_fixture_fires_exactly(family):
+    path = FIXTURES / f"{family}_bad.py"
+    expected = _expected(path)
+    assert expected, f"{path} has no EXPECT markers"
+    got = Counter((f.rule, f.line) for f in _lint(path, FAMILIES[family]))
+    assert got == expected, (
+        f"{family}: findings != EXPECT markers\n"
+        f"  missing: {expected - got}\n  extra:   {got - expected}")
+    # the family fires more than one distinct rule id across its fixtures
+    assert {r for r, _ in got} <= FAMILIES[family]
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_good_fixture_is_silent(family):
+    path = FIXTURES / f"{family}_good.py"
+    findings = _lint(path, FAMILIES[family])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_every_documented_rule_has_a_firing_fixture():
+    fired = set()
+    for family in FAMILIES:
+        fired |= {r for r, _ in _expected(FIXTURES / f"{family}_bad.py")}
+    assert fired == set(RULE_DOCS), (
+        f"rules documented but never exercised: {set(RULE_DOCS) - fired}; "
+        f"exercised but undocumented: {fired - set(RULE_DOCS)}")
+
+
+def test_real_tree_is_clean():
+    findings = lint_paths([ROOT / "src", ROOT / "benchmarks", ROOT / "tests"],
+                          project_root=ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_deleting_a_capability_flag_is_caught(tmp_path):
+    """The acceptance canary: removing one capability-flag line from a
+    registered backend must fail the lint."""
+    src = (ROOT / "src/repro/index/backends/brute.py").read_text()
+    line = "    supports_growth = True\n"
+    assert line in src
+    mutated = tmp_path / "brute.py"
+    mutated.write_text(src.replace(line, ""))
+    findings = _lint(mutated, {"F121"})
+    assert any(f.rule == "F121" and "supports_growth" in f.message
+               for f in findings), [f.render() for f in findings]
+
+
+def test_bare_item_in_core_hnsw_is_caught(tmp_path):
+    """The other acceptance canary: a naked .item() in core/hnsw.py (a
+    hot-path module by location) must fail the lint."""
+    hot = tmp_path / "repro" / "core"
+    hot.mkdir(parents=True)
+    src = (ROOT / "src/repro/core/hnsw.py").read_text()
+    mutated = hot / "hnsw.py"
+    mutated.write_text(src + "\n\ndef _canary(x):\n    return x.item()\n")
+    findings = _lint(mutated, {"F101"})
+    assert any(f.rule == "F101" for f in findings), \
+        [f.render() for f in findings]
+    # and the untouched original stays clean under the same selection
+    clean = _lint(ROOT / "src/repro/core/hnsw.py", {"F101"})
+    assert clean == [], [f.render() for f in clean]
+
+
+# ---- satellite (2): accepted_opts derives from the live signature ---------
+
+def test_accepted_opts_tracks_factory_signature():
+    import repro.index as ix
+    from repro.index import registry
+
+    try:
+        @ix.register("_sigtrack")
+        def _v1(cfg, foo: int = 1):
+            raise AssertionError("never constructed")
+
+        assert registry.accepted_opts("_sigtrack") == ("foo",)
+        with pytest.raises(ValueError, match="foo"):
+            registry.validate_opts("_sigtrack", {"bar": 2})
+
+        # re-registering with a DIFFERENT signature must be reflected
+        # immediately — the per-name cache is invalidated on register()
+        @ix.register("_sigtrack")
+        def _v2(cfg, bar: int = 2, *, baz: str = "x"):
+            raise AssertionError("never constructed")
+
+        assert registry.accepted_opts("_sigtrack") == ("bar", "baz")
+        registry.validate_opts("_sigtrack", {"bar": 1, "baz": "y"})
+        with pytest.raises(ValueError, match="accepted keys: bar, baz"):
+            registry.validate_opts("_sigtrack", {"foo": 1})
+    finally:
+        registry._REGISTRY.pop("_sigtrack", None)
+
+
+def test_accepted_opts_var_kw_includes_fold_config_fields():
+    import dataclasses
+
+    from repro.core.dedup import FoldConfig
+    from repro.index import registry
+
+    fields = {f.name for f in dataclasses.fields(FoldConfig)}
+    got = set(registry.accepted_opts("hnsw"))
+    assert fields <= got, fields - got

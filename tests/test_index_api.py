@@ -63,12 +63,12 @@ def test_registry_unknown_key_and_custom_registration():
     calls = {}
 
     @ix.register("_test_backend")
-    def _factory(cfg, **opts):
+    def _factory(cfg, **opts):  # foldlint: disable=F132 (opts capture IS the test)
         calls["cfg"], calls["opts"] = cfg, opts
         return make("brute", cfg=cfg)       # delegate for simplicity
 
     try:
-        pipe = ix.make_pipeline("_test_backend", cfg=FC, flavor=3)
+        pipe = ix.make_pipeline("_test_backend", cfg=FC, flavor=3)  # foldlint: disable=F131 (asserting opts reach the factory verbatim)
         assert isinstance(pipe, DedupPipeline)
         assert calls["cfg"] is FC and calls["opts"] == {"flavor": 3}
     finally:

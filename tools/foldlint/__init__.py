@@ -1,0 +1,217 @@
+"""foldlint — a JAX-aware static-analysis pass for the FOLD repro.
+
+The invariants that keep this codebase fast and correct do not live in any
+one function: the dedup step must stay a single async-dispatched device
+program (no stray host syncs in hot paths), `jax.jit` programs must be
+built once and reused (no per-call retracing), registered backends must
+implement exactly the capability surface their flags declare, and config
+plumbing done by string key must track the dataclasses it names. foldlint
+checks all of that from the AST, before anything runs.
+
+Rule families (see RULES.md for the full catalogue):
+
+  F10x  host-sync hygiene      .item(), device_get, np.asarray, host casts
+                               of traced values inside hot-path modules
+  F11x  jit/donation hygiene   jit construction in loops, Python branches
+                               on traced booleans, donated-arg reuse
+  F12x  capability contract    backend classes vs. index/protocol.py flags
+  F13x  registry opts drift    accepted_opts vs. real factory signatures
+  F14x  config-key drift       string-keyed FoldConfig/HNSWConfig/
+                               ServiceConfig plumbing vs. the live fields
+
+Pragmas (all forms take effect for the source line they sit on, or the
+whole construct when placed on its first line):
+
+  # foldlint: sync-ok(<reason>)    acknowledge an intentional host sync
+                                   (suppresses F10x on that line)
+  # foldlint: disable=F111,F142    suppress specific rules on that line
+  # foldlint: cold-path            on a `def` line: the whole function is
+                                   off the hot path (lifecycle/snapshot/
+                                   repair work) — F10x does not apply
+  # foldlint: hot-path             module marker: treat this file as a
+                                   hot-path module regardless of location
+  # foldlint: module-sync-ok(<reason>)
+                                   module marker: this file is host-side
+                                   by design — F10x does not apply
+
+Usage:  python -m foldlint SRC [SRC...]   (exit 1 when findings remain)
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable
+
+__all__ = ["Finding", "FileInfo", "Project", "lint_paths", "RULE_DOCS"]
+
+__version__ = "0.1.0"
+
+# Directories never linted (deliberately-broken fixture corpora, vendored
+# shims, caches). Overridable via lint_paths(default_excludes=False).
+DEFAULT_EXCLUDES = ("foldlint_fixtures", "_vendor", "__pycache__", ".git",
+                    "node_modules", ".claude")
+
+# Hot-path modules: the admission loop's device-dispatch surfaces. A stray
+# host sync here stalls the depth-2 pipeline (the paper's throughput claims
+# assume one async device program per dedup step).
+HOT_PATH_PARTS = ("repro/core/", "repro/kernels/", "index/backends/")
+HOT_PATH_FILES = ("service/executor.py", "service/batcher.py")
+
+_PRAGMA_RE = re.compile(r"#\s*foldlint:\s*([a-z-]+[a-zA-Z0-9_()=,.\s'\"-]*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.rule} {self.message}"
+
+
+class FileInfo:
+    """One parsed source file plus its pragma annotations."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+        # pragma tables ---------------------------------------------------
+        self.sync_ok_lines: set[int] = set()
+        self.disabled: dict[int, set[str]] = {}
+        self.cold_lines: set[int] = set()
+        self.module_hot = False
+        self.module_sync_ok = False
+        for i, text in enumerate(self.lines, start=1):
+            m = _PRAGMA_RE.search(text)
+            if not m:
+                continue
+            directive = m.group(1).strip()
+            if directive.startswith("sync-ok"):
+                self.sync_ok_lines.add(i)
+            elif directive.startswith("disable="):
+                # ids end at the first whitespace/paren — a trailing
+                # rationale like `disable=F131 (why)` is encouraged
+                ids = directive[len("disable="):].split()[0].split(",")
+                self.disabled.setdefault(i, set()).update(
+                    x.strip().rstrip("(") for x in ids if x.strip())
+            elif directive.startswith("cold-path"):
+                self.cold_lines.add(i)
+            elif directive.startswith("hot-path"):
+                self.module_hot = True
+            elif directive.startswith("module-sync-ok"):
+                self.module_sync_ok = True
+
+    # -- classification ----------------------------------------------------
+    @property
+    def is_hot(self) -> bool:
+        if self.module_sync_ok:
+            return False
+        if self.module_hot:
+            return True
+        p = self.rel
+        return (any(part in p for part in HOT_PATH_PARTS)
+                or any(p.endswith(f) for f in HOT_PATH_FILES))
+
+    # -- suppression -------------------------------------------------------
+    def node_lines(self, node: ast.AST) -> range:
+        end = getattr(node, "end_lineno", None) or node.lineno
+        return range(node.lineno, end + 1)
+
+    def suppressed(self, rule: str, node: ast.AST) -> bool:
+        for ln in self.node_lines(node):
+            if rule.startswith("F10") and ln in self.sync_ok_lines:
+                return True
+            if rule in self.disabled.get(ln, ()) :
+                return True
+        return False
+
+    def cold_function_spans(self) -> list[tuple[int, int]]:
+        """(start, end) line spans of functions marked `# foldlint: cold-path`
+        (marker on the def line or any of its decorator lines), plus
+        auto-exempt dunders — object construction/repr are never hot."""
+        spans = []
+        for node in ast.walk(self.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            head = [node.lineno] + [d.lineno for d in node.decorator_list]
+            marked = any(ln in self.cold_lines for ln in head)
+            if marked or (node.name.startswith("__")
+                          and node.name.endswith("__")):
+                spans.append((min(head),
+                              getattr(node, "end_lineno", node.lineno)))
+        return spans
+
+
+class Project:
+    """Cross-file context: class tables, registered factories, config
+    dataclass fields, donating jit functions. Built over the union of the
+    linted files and the project's `src/` tree so that per-file rules can
+    resolve names defined elsewhere."""
+
+    def __init__(self, files: Iterable[FileInfo]):
+        from foldlint._tables import build_tables
+        self.files = list(files)
+        (self.classes, self.factories, self.config_fields,
+         self.donators) = build_tables(self.files)
+
+
+def _iter_py(paths: Iterable[Path], excludes: tuple[str, ...]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in excludes for part in f.parts):
+                    out.append(f)
+    return out
+
+
+def _load(path: Path, root: Path) -> FileInfo | None:
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    try:
+        return FileInfo(path, rel, path.read_text(encoding="utf-8"))
+    except (SyntaxError, UnicodeDecodeError):
+        return None
+
+
+def lint_paths(paths: Iterable[str | Path], project_root: str | Path = ".",
+               select: Iterable[str] | None = None,
+               default_excludes: bool = True) -> list[Finding]:
+    """Lint the given files/directories; returns sorted findings.
+
+    Cross-file tables are built from the linted files plus `src/` under
+    `project_root` (when present), so contract/opts/config rules resolve
+    classes and factories that live outside the linted set."""
+    from foldlint.rules import run_rules
+    root = Path(project_root)
+    excludes = DEFAULT_EXCLUDES if default_excludes else ("__pycache__",)
+    lint_files = [f for f in (_load(p, root)
+                              for p in _iter_py([Path(p) for p in paths],
+                                                excludes))
+                  if f is not None]
+    context_files = {f.rel: f for f in lint_files}
+    src = root / "src"
+    if src.is_dir():
+        for p in _iter_py([src], excludes):
+            f = _load(p, root)
+            if f is not None:
+                context_files.setdefault(f.rel, f)
+    project = Project(context_files.values())
+    findings = run_rules(lint_files, project, select=select)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+# populated by foldlint.rules at import; re-exported for --list-rules
+from foldlint.rules import RULE_DOCS  # noqa: E402  (circular-safe: docs only)

@@ -1,0 +1,62 @@
+"""CLI: `python -m foldlint src benchmarks tests` (exit 1 on findings).
+
+Also runnable as `python tools/foldlint ...` — the bootstrap below puts
+the parent directory on sys.path so the package resolves either way.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+if __package__ in (None, ""):                      # python tools/foldlint
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from foldlint import RULE_DOCS, __version__, lint_paths
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="foldlint",
+        description="JAX-aware static analysis for the FOLD repro "
+                    "(host-sync, jit/donation, backend-contract, "
+                    "registry-opts and config-drift rules).")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--project-root", default=".",
+                    help="repo root used to resolve cross-file context "
+                         "(default: cwd)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to enable (default: all)")
+    ap.add_argument("--no-default-excludes", action="store_true",
+                    help="also lint foldlint_fixtures/_vendor directories")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--version", action="version",
+                    version=f"foldlint {__version__}")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(RULE_DOCS):
+            print(f"{rule}  {RULE_DOCS[rule]}")
+        return 0
+
+    select = ([s.strip() for s in args.select.split(",") if s.strip()]
+              if args.select else None)
+    findings = lint_paths(args.paths, project_root=args.project_root,
+                          select=select,
+                          default_excludes=not args.no_default_excludes)
+    for finding in findings:
+        print(finding.render())
+    n = len(findings)
+    if n:
+        print(f"\nfoldlint: {n} finding{'s' if n != 1 else ''} "
+              f"(see tools/foldlint/RULES.md for rule docs and pragmas)",
+              file=sys.stderr)
+        return 1
+    print("foldlint: clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

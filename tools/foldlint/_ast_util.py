@@ -1,0 +1,114 @@
+"""Small AST helpers shared by the rule modules."""
+from __future__ import annotations
+
+import ast
+
+__all__ = ["dotted_name", "const_value", "literal_or_none", "is_stub_body",
+           "call_name", "device_tainted", "enclosing_spans"]
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """`jax.numpy.sum` -> "jax.numpy.sum"; None for non-name expressions."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def const_value(node: ast.AST):
+    """The python value of a Constant node, else None."""
+    return node.value if isinstance(node, ast.Constant) else None
+
+
+def literal_or_none(node: ast.AST):
+    """ast.literal_eval that returns None instead of raising."""
+    try:
+        return ast.literal_eval(node)
+    except (ValueError, SyntaxError, TypeError):
+        return None
+
+
+def is_stub_body(body: list) -> bool:
+    """True when a function body is only a docstring / `...` / `pass` —
+    i.e. a Protocol stub, not an implementation."""
+    real = [s for s in body
+            if not (isinstance(s, ast.Expr)
+                    and isinstance(s.value, ast.Constant)
+                    and isinstance(s.value.value, str))]
+    if not real:
+        return True
+    return all(isinstance(s, ast.Pass)
+               or (isinstance(s, ast.Expr)
+                   and isinstance(s.value, ast.Constant)
+                   and s.value.value is Ellipsis)
+               for s in real)
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+# -- device-value taint ------------------------------------------------------
+#
+# Heuristic, local, and deliberately narrow: an expression is "device
+# tainted" when it syntactically must produce a JAX array — a call into
+# jnp./lax./jax. namespaces, or an attribute path through the backends'
+# device-state containers (`.state` / `.states`, the HNSWState /
+# ShardedState pytrees). Used by F102 (host casts of traced values) and
+# F112 (Python branches on traced booleans). Plain numpy stays untainted,
+# so host-side backends and test code don't false-positive.
+
+_DEVICE_NAMESPACES = ("jnp.", "lax.", "jax.numpy.", "jax.lax.")
+_DEVICE_EXACT_PREFIXES = ("jax.",)
+_DEVICE_NAME_BLOCKLIST = ("jax.device_count", "jax.local_device_count",
+                          "jax.devices", "jax.default_backend",
+                          "jax.make_mesh", "jax.tree_util", "jax.tree")
+_STATE_SEGMENTS = ("state", "states")
+
+
+def _call_is_device(name: str) -> bool:
+    if any(name.startswith(b) for b in _DEVICE_NAME_BLOCKLIST):
+        return False
+    if any(name.startswith(ns) for ns in _DEVICE_NAMESPACES):
+        return True
+    return any(name.startswith(p) for p in _DEVICE_EXACT_PREFIXES)
+
+
+def device_tainted(node: ast.AST) -> bool:
+    """Syntactic must-be-a-JAX-array check (see module comment)."""
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name and _call_is_device(name):
+            return True
+        # methods on tainted receivers: x.sum() where x is tainted
+        if isinstance(node.func, ast.Attribute):
+            return device_tainted(node.func.value)
+        return False
+    if isinstance(node, ast.Attribute):
+        parts = (dotted_name(node) or "").split(".")
+        if any(p in _STATE_SEGMENTS for p in parts[:-1]):
+            return True
+        return device_tainted(node.value)
+    if isinstance(node, ast.Subscript):
+        return device_tainted(node.value)
+    if isinstance(node, ast.BinOp):
+        return device_tainted(node.left) or device_tainted(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return device_tainted(node.operand)
+    if isinstance(node, ast.Compare):
+        return (device_tainted(node.left)
+                or any(device_tainted(c) for c in node.comparators))
+    if isinstance(node, ast.BoolOp):
+        return any(device_tainted(v) for v in node.values)
+    if isinstance(node, ast.IfExp):
+        return device_tainted(node.body) or device_tainted(node.orelse)
+    if isinstance(node, ast.Name):
+        parts = (dotted_name(node) or "").split(".")
+        return any(p in _STATE_SEGMENTS for p in parts[:-1])
+    return False
+
+
+def enclosing_spans(spans: list, lineno: int) -> bool:
+    return any(a <= lineno <= b for a, b in spans)

@@ -1,0 +1,301 @@
+"""Cross-file symbol tables for the contract / opts / config-drift rules.
+
+Everything here is derived purely from the AST — no project imports — so
+foldlint can run on a tree that doesn't import (and in CI before deps are
+resolved). Tables are keyed by simple name; the repo has no colliding
+class names across modules, and a collision would only widen (never
+narrow) what the rules accept.
+"""
+from __future__ import annotations
+
+import ast
+from typing import TYPE_CHECKING, Iterable, NamedTuple
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo
+
+from foldlint._ast_util import (const_value, dotted_name, is_stub_body,
+                                literal_or_none)
+
+PROTOCOL_CLASS = "DedupBackend"
+
+# The DedupBackend capability flags every concrete backend must declare
+# (directly or via a concrete base) — see rules/contract.py F121.
+CAPABILITY_FLAGS = ("supports_growth", "supports_snapshots",
+                    "supports_deletion", "track_slots")
+
+
+class MethodInfo(NamedTuple):
+    lineno: int
+    is_stub: bool        # body is only docstring/.../pass (protocol stub)
+    is_property: bool
+    kind: str            # "def" | "assign"
+
+
+class ClassInfo(NamedTuple):
+    name: str
+    rel: str
+    lineno: int
+    bases: tuple[str, ...]
+    flags: dict          # attr name -> (lineno, constant value | None)
+    methods: dict        # method/attr name -> MethodInfo
+    is_protocol: bool
+
+
+class FactoryInfo(NamedTuple):
+    key: str             # registry key, e.g. "hnsw"
+    rel: str
+    lineno: int
+    func_name: str
+    named_params: tuple  # keyword-accepting params, first-`cfg` excluded
+    has_var_kw: bool
+    var_kw_name: str | None
+    forwards_var_kw: bool  # body contains a call with **<var_kw_name>
+    returns_class: str | None
+
+
+class Tables(NamedTuple):
+    classes: dict
+    factories: dict
+    config_fields: dict   # class name -> {field name: lineno}
+    donators: dict        # func name -> {param index: param name}
+
+
+def _class_info(node: ast.ClassDef, rel: str) -> ClassInfo:
+    bases = tuple(n for n in (dotted_name(b) for b in node.bases) if n)
+    is_protocol = any(b.split(".")[-1] == "Protocol" for b in bases)
+    flags: dict = {}
+    methods: dict = {}
+    for item in node.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            deco = {dotted_name(d) or "" for d in item.decorator_list}
+            methods[item.name] = MethodInfo(
+                item.lineno, is_stub_body(item.body),
+                any(d.split(".")[-1] == "property" for d in deco), "def")
+        elif isinstance(item, ast.Assign):
+            for tgt in item.targets:
+                if isinstance(tgt, ast.Name):
+                    flags[tgt.id] = (item.lineno, const_value(item.value))
+                    methods[tgt.id] = MethodInfo(item.lineno, False, False,
+                                                 "assign")
+        elif isinstance(item, ast.AnnAssign) and isinstance(item.target,
+                                                            ast.Name):
+            if item.value is not None:
+                flags[item.target.id] = (item.lineno,
+                                         const_value(item.value))
+            methods[item.target.id] = MethodInfo(item.lineno,
+                                                 item.value is None, False,
+                                                 "assign")
+    # instance attributes (`self.x = ...` anywhere in a method) count as
+    # part of the implemented surface — several backends bind name/order/
+    # sig_spec in __init__ rather than at class level
+    for item in node.body:
+        if not isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for sub in ast.walk(item):
+            targets: list = []
+            if isinstance(sub, ast.Assign):
+                targets = sub.targets
+            elif isinstance(sub, (ast.AnnAssign, ast.AugAssign)):
+                targets = [sub.target]
+            for tgt in targets:
+                if (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"
+                        and tgt.attr not in methods):
+                    methods[tgt.attr] = MethodInfo(sub.lineno, False, False,
+                                                   "self-assign")
+    return ClassInfo(node.name, rel, node.lineno, bases, flags, methods,
+                     is_protocol)
+
+
+def _registered_key(func: ast.FunctionDef) -> tuple[str, int] | None:
+    """`@register("key")` decoration -> (key, decorator line)."""
+    for dec in func.decorator_list:
+        if (isinstance(dec, ast.Call)
+                and (dotted_name(dec.func) or "").split(".")[-1] == "register"
+                and dec.args and isinstance(dec.args[0], ast.Constant)
+                and isinstance(dec.args[0].value, str)):
+            return dec.args[0].value, dec.lineno
+    return None
+
+
+def _factory_info(func: ast.FunctionDef, key: str, rel: str) -> FactoryInfo:
+    a = func.args
+    named: list[str] = []
+    ordered = a.posonlyargs + a.args
+    for i, arg in enumerate(ordered):
+        if i == 0 and arg.arg == "cfg":
+            continue
+        named.append(arg.arg)
+    named.extend(kw.arg for kw in a.kwonlyargs)
+    var_kw = a.kwarg.arg if a.kwarg else None
+    forwards = False
+    returns_class = None
+    for sub in ast.walk(func):
+        if var_kw and isinstance(sub, ast.Call):
+            if any(kw.arg is None and isinstance(kw.value, ast.Name)
+                   and kw.value.id == var_kw for kw in sub.keywords):
+                forwards = True
+        if isinstance(sub, ast.Return) and isinstance(sub.value, ast.Call):
+            name = dotted_name(sub.value.func)
+            if name:
+                returns_class = name.split(".")[-1]
+    return FactoryInfo(key, rel, func.lineno, func.name, tuple(named),
+                       var_kw is not None, var_kw, forwards, returns_class)
+
+
+_CONFIG_MARKERS = ("dataclass",)
+
+
+def _config_fields(node: ast.ClassDef) -> dict | None:
+    """Field table for dataclass / NamedTuple classes (else None)."""
+    is_dc = any((dotted_name(d) or "").split(".")[-1] in _CONFIG_MARKERS
+                or (isinstance(d, ast.Call)
+                    and (dotted_name(d.func) or "").split(".")[-1]
+                    in _CONFIG_MARKERS)
+                for d in node.decorator_list)
+    is_nt = any((dotted_name(b) or "").split(".")[-1] == "NamedTuple"
+                for b in node.bases)
+    if not (is_dc or is_nt):
+        return None
+    fields: dict = {}
+    for item in node.body:
+        if isinstance(item, ast.AnnAssign) and isinstance(item.target,
+                                                          ast.Name):
+            if not item.target.id.startswith("_"):
+                fields[item.target.id] = item.lineno
+    return fields or None
+
+
+def _donated_params(func: ast.FunctionDef) -> dict | None:
+    """{arg index: param name} for jit decorators carrying donate_argnums."""
+    for dec in func.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        head = (dotted_name(dec.func) or "").split(".")[-1]
+        target = dec
+        if head == "partial" and dec.args:
+            inner = dotted_name(dec.args[0]) or ""
+            if inner.split(".")[-1] not in ("jit", "pjit"):
+                continue
+        elif head not in ("jit", "pjit"):
+            continue
+        for kw in target.keywords:
+            if kw.arg in ("donate_argnums", "donate_argnames"):
+                nums = literal_or_none(kw.value)
+                if nums is None:
+                    return None
+                if isinstance(nums, int):
+                    nums = (nums,)
+                params = [a.arg for a in func.args.posonlyargs
+                          + func.args.args]
+                out = {}
+                for n in nums:
+                    if isinstance(n, int) and n < len(params):
+                        out[n] = params[n]
+                    elif isinstance(n, str) and n in params:
+                        out[params.index(n)] = n
+                return out or None
+    return None
+
+
+def build_tables(files: Iterable["FileInfo"]) -> Tables:
+    # first definition wins on name collisions: lint_paths feeds the
+    # LINTED files before the src/ context files, so when a caller lints
+    # a modified copy of a project module the copy's symbols take
+    # precedence over the in-tree originals
+    classes: dict = {}
+    factories: dict = {}
+    config_fields: dict = {}
+    donators: dict = {}
+    for f in files:
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ClassDef):
+                if node.name not in classes:
+                    classes[node.name] = _class_info(node, f.rel)
+                    cf = _config_fields(node)
+                    if cf is not None:
+                        config_fields[node.name] = cf
+            elif isinstance(node, ast.FunctionDef):
+                reg = _registered_key(node)
+                if reg is not None and reg[0] not in factories:
+                    factories[reg[0]] = _factory_info(node, reg[0], f.rel)
+                donated = _donated_params(node)
+                if donated is not None:
+                    donators.setdefault(node.name, donated)
+    return Tables(classes, factories, config_fields, donators)
+
+
+# ---- resolution helpers used by the contract rule --------------------------
+
+def resolve_attr(classes: dict, cls: ClassInfo, name: str,
+                 include_protocol: bool = True):
+    """Walk cls + bases (depth-first, left-to-right) for `name`.
+
+    Returns (owner ClassInfo, MethodInfo) or None. Protocol stub bodies
+    (`...`) never count as found; the protocol's *concrete* defaults (the
+    raising delete(), compact(), pop_slot_log()) do count when the class
+    actually inherits DedupBackend and include_protocol is True."""
+    seen: set[str] = set()
+
+    def _walk(c: ClassInfo):
+        if c.name in seen:
+            return None
+        seen.add(c.name)
+        mi = c.methods.get(name)
+        if mi is not None and not mi.is_stub:
+            if not c.is_protocol or include_protocol:
+                return (c, mi)
+        for b in c.bases:
+            base = classes.get(b.split(".")[-1])
+            if base is not None:
+                hit = _walk(base)
+                if hit is not None:
+                    return hit
+        return None
+
+    return _walk(cls)
+
+
+def resolve_flag(classes: dict, cls: ClassInfo, flag: str,
+                 include_protocol: bool = True):
+    """Like resolve_attr but for capability-flag constants; returns
+    (owner ClassInfo, lineno, value) or None."""
+    seen: set[str] = set()
+
+    def _walk(c: ClassInfo):
+        if c.name in seen:
+            return None
+        seen.add(c.name)
+        if flag in c.flags and (not c.is_protocol or include_protocol):
+            ln, val = c.flags[flag]
+            return (c, ln, val)
+        for b in c.bases:
+            base = classes.get(b.split(".")[-1])
+            if base is not None:
+                hit = _walk(base)
+                if hit is not None:
+                    return hit
+        return None
+
+    return _walk(cls)
+
+
+def inherits_protocol(classes: dict, cls: ClassInfo) -> bool:
+    seen: set[str] = set()
+
+    def _walk(c: ClassInfo) -> bool:
+        if c.name in seen:
+            return False
+        seen.add(c.name)
+        for b in c.bases:
+            simple = b.split(".")[-1]
+            if simple == PROTOCOL_CLASS:
+                return True
+            base = classes.get(simple)
+            if base is not None and _walk(base):
+                return True
+        return False
+
+    return _walk(cls)

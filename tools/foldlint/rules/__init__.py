@@ -1,0 +1,36 @@
+"""Rule registry: each module contributes `check(file, project) -> findings`.
+
+Rule id scheme (documented in ../RULES.md):
+  F101-F103  host-sync hygiene (hot-path modules only)
+  F111-F113  jit / donation hygiene (everywhere)
+  F121-F127  backend capability-contract conformance (class definitions)
+  F131-F132  registry opts drift (factory signatures vs. call sites)
+  F141-F142  config-dataclass key drift (string-keyed plumbing)
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo, Finding, Project
+
+from foldlint.rules import configdrift, contract, hostsync, jit, opts
+
+_MODULES = (hostsync, jit, contract, opts, configdrift)
+
+RULE_DOCS: dict[str, str] = {}
+for _m in _MODULES:
+    RULE_DOCS.update(_m.DOCS)
+
+
+def run_rules(files: Iterable["FileInfo"], project: "Project",
+              select: Iterable[str] | None = None) -> list["Finding"]:
+    selected = set(select) if select else None
+    out: list = []
+    for f in files:
+        for mod in _MODULES:
+            for finding in mod.check(f, project):
+                if selected is not None and finding.rule not in selected:
+                    continue
+                out.append(finding)
+    return out

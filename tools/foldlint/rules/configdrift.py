@@ -1,0 +1,125 @@
+"""F14x — config-dataclass key drift.
+
+Benchmarks and CLIs plumb FoldConfig / HNSWConfig / ServiceConfig /
+SigSpec fields by string key (`dataclasses.replace(cfg, **{...})`,
+`getattr(cfg, "tau")`, argparse dest names turned into kwargs). When a
+field is renamed, those sites keep "working" — getattr with a default
+hides the miss, replace raises only on the code path that reaches it.
+These rules resolve string keys against the live field tables built
+from the AST (dataclass / NamedTuple AnnAssigns, base fields merged).
+
+F141  a keyword in a `FoldConfig(...)`-style construction (any config/
+      spec class in the table) names a field that does not exist.
+F142  a string key in `getattr`/`setattr` on a config-named receiver,
+      or a keyword in `dataclasses.replace(cfg, ...)` / `cfg._replace(
+      ...)`, names a field no known config class has.
+"""
+from __future__ import annotations
+
+import ast
+from typing import TYPE_CHECKING, Iterator
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo, Project
+
+from foldlint import Finding
+from foldlint._ast_util import call_name, dotted_name
+
+DOCS = {
+    "F141": "unknown field keyword in a config-class construction",
+    "F142": "string config key (getattr/setattr/replace/_replace) that no "
+            "known config class defines",
+}
+
+_CONFIG_SUFFIXES = ("Config", "Spec")
+_RECEIVER_HINTS = ("cfg", "config", "spec")
+
+
+def _is_config_class(name: str) -> bool:
+    return any(name.endswith(s) for s in _CONFIG_SUFFIXES)
+
+
+def _fields_with_bases(project: "Project", name: str,
+                       seen: set | None = None) -> set:
+    seen = seen or set()
+    if name in seen:
+        return set()
+    seen.add(name)
+    out = set(project.config_fields.get(name, ()))
+    cls = project.classes.get(name)
+    if cls is not None:
+        for b in cls.bases:
+            simple = b.split(".")[-1]
+            if simple in project.config_fields:
+                out |= _fields_with_bases(project, simple, seen)
+    return out
+
+
+def _union_fields(project: "Project") -> set:
+    out: set = set()
+    for name in project.config_fields:
+        if _is_config_class(name):
+            out |= project.config_fields[name].keys()
+    return out
+
+
+def _receiver_is_config(node: ast.AST) -> bool:
+    name = dotted_name(node) or ""
+    leaf = name.split(".")[-1].lower()
+    return any(h in leaf for h in _RECEIVER_HINTS)
+
+
+def check(f: "FileInfo", project: "Project") -> Iterator[Finding]:
+    union = _union_fields(project)
+    if not union:
+        return
+    for node in ast.walk(f.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node) or ""
+        simple = name.split(".")[-1]
+
+        # F141 — construction of a known config class
+        if simple in project.config_fields and _is_config_class(simple):
+            fields = _fields_with_bases(project, simple)
+            for kw in node.keywords:
+                if kw.arg is None or kw.arg in fields:
+                    continue
+                if not f.suppressed("F141", node):
+                    yield Finding(
+                        "F141", f.rel, kw.value.lineno, kw.value.col_offset,
+                        f"`{simple}` has no field `{kw.arg}` — known "
+                        "fields: "
+                        f"{', '.join(sorted(fields)) or '(none)'}")
+            continue
+
+        # F142a — getattr/setattr with a constant key on a config receiver
+        if simple in ("getattr", "setattr", "hasattr") and len(node.args) >= 2:
+            recv, key = node.args[0], node.args[1]
+            if (_receiver_is_config(recv) and isinstance(key, ast.Constant)
+                    and isinstance(key.value, str)
+                    and key.value not in union
+                    and not key.value.startswith("_")):
+                if not f.suppressed("F142", node):
+                    yield Finding(
+                        "F142", f.rel, key.lineno, key.col_offset,
+                        f"string key `{key.value}` on a config object — no "
+                        "known *Config/*Spec class defines it (renamed "
+                        "field?)")
+            continue
+
+        # F142b — dataclasses.replace(cfg, ...) / cfg._replace(...)
+        is_replace = (simple == "replace" and node.args
+                      and _receiver_is_config(node.args[0]))
+        is_nt_replace = (isinstance(node.func, ast.Attribute)
+                         and node.func.attr == "_replace"
+                         and _receiver_is_config(node.func.value))
+        if is_replace or is_nt_replace:
+            for kw in node.keywords:
+                if kw.arg is None or kw.arg in union:
+                    continue
+                if not f.suppressed("F142", node):
+                    yield Finding(
+                        "F142", f.rel, kw.value.lineno, kw.value.col_offset,
+                        f"replace key `{kw.arg}` — no known *Config/*Spec "
+                        "class defines it (renamed field?)")

@@ -1,0 +1,199 @@
+"""F12x — backend capability-contract conformance.
+
+`index/protocol.py` is deliberately structural: nothing at runtime
+forces a registered backend to implement what its capability flags
+promise until a workload trips over the hole. These rules cross-check
+every class a registered factory returns (plus anything inheriting
+`DedupBackend`) against the protocol, statically:
+
+F121  a registered backend must declare ALL four capability flags
+      explicitly (itself or via a concrete base) — relying on the
+      protocol defaults makes a deleted flag line semantically
+      invisible, which is exactly the drift this lane exists to catch.
+F122  `delete` overridden while the resolved `supports_deletion` is
+      False — dead code or an undeclared capability.
+F123  `supports_deletion = True` without a `delete` implementation —
+      the inherited protocol default raises NotImplementedError, so
+      every lifecycle workload would crash at first eviction.
+F124  `fused_step` without a real `search`: the read-only query path
+      (DedupPipeline.query, cluster read replicas) calls `search`
+      directly; fused backends may refuse batch_sim/insert but never
+      search.
+F125  a registered backend is missing part of the required surface
+      (search/insert/batch_sim/stats/stats_schema/sig_spec/tau_batch/
+      tau_index/capacity/inserted/name/order).
+F126  `track_slots = True` without a resolvable `pop_slot_log`.
+F127  `supports_growth`/`supports_snapshots` True without grow /
+      save+restore implementations.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterator
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo, Project
+
+from foldlint import Finding
+from foldlint._tables import (CAPABILITY_FLAGS, PROTOCOL_CLASS, ClassInfo,
+                              inherits_protocol, resolve_attr, resolve_flag)
+
+DOCS = {
+    "F121": "registered backend missing an explicit capability-flag "
+            "declaration (protocol defaults don't count)",
+    "F122": "delete() implemented but resolved supports_deletion is False",
+    "F123": "supports_deletion=True without a delete() implementation",
+    "F124": "fused_step without a real search() (read-only query path "
+            "requires it)",
+    "F125": "registered backend missing a required protocol surface member",
+    "F126": "track_slots=True without a resolvable pop_slot_log()",
+    "F127": "supports_growth/supports_snapshots=True without grow/"
+            "save+restore",
+}
+
+REQUIRED_SURFACE = ("name", "order", "sig_spec", "tau_batch", "tau_index",
+                    "capacity", "inserted", "batch_sim", "search", "insert",
+                    "stats_schema", "stats")
+
+
+def _flag(classes: dict, cls: ClassInfo, flag: str,
+          default: bool) -> tuple[bool, bool]:
+    """(resolved value, explicitly declared outside the protocol)."""
+    hit = resolve_flag(classes, cls, flag, include_protocol=False)
+    if hit is not None:
+        _, _, val = hit
+        return (bool(val) if val is not None else default, True)
+    if inherits_protocol(classes, cls):
+        proto = classes.get(PROTOCOL_CLASS)
+        if proto is not None and flag in proto.flags:
+            _, val = proto.flags[flag]
+            return (bool(val) if val is not None else default, False)
+    return (default, False)
+
+
+def _has(classes: dict, cls: ClassInfo, name: str,
+         with_protocol_defaults: bool = False) -> bool:
+    """Is `name` implemented (non-stub) on cls or a concrete base?
+    Protocol *concrete defaults* (delete/compact/pop_slot_log/deleted/
+    dead_fraction bodies) only count when explicitly requested AND the
+    class really inherits the protocol."""
+    if resolve_attr(classes, cls, name, include_protocol=False) is not None:
+        return True
+    if with_protocol_defaults and inherits_protocol(classes, cls):
+        proto = classes.get(PROTOCOL_CLASS)
+        if proto is not None:
+            mi = proto.methods.get(name)
+            return mi is not None and not mi.is_stub
+    return False
+
+
+def check(f: "FileInfo", project: "Project") -> Iterator[Finding]:
+    classes = project.classes
+    registered_returns = {fac.returns_class: fac
+                          for fac in project.factories.values()
+                          if fac.returns_class}
+    for node_cls in classes.values():
+        if node_cls.rel != f.rel:
+            continue
+        cls = node_cls
+        if cls.name == PROTOCOL_CLASS or cls.is_protocol:
+            continue
+        is_registered = cls.name in registered_returns
+        is_backend = is_registered or inherits_protocol(classes, cls)
+        if not is_backend:
+            continue
+        anchor = cls.lineno
+
+        def fire(rule: str, msg: str, line: int = 0):
+            ln = line or anchor
+            probe = type("N", (), {"lineno": ln, "end_lineno": ln})()
+            if not f.suppressed(rule, probe):
+                return Finding(rule, f.rel, ln, 0, msg)
+            return None
+
+        supports_deletion, _ = _flag(classes, cls, "supports_deletion",
+                                     False)
+        supports_growth, _ = _flag(classes, cls, "supports_growth", True)
+        supports_snapshots, _ = _flag(classes, cls, "supports_snapshots",
+                                      True)
+        track_slots, _ = _flag(classes, cls, "track_slots", False)
+
+        # F121 — registered backends declare every flag explicitly
+        if is_registered:
+            for flag in CAPABILITY_FLAGS:
+                if resolve_flag(classes, cls, flag,
+                                include_protocol=False) is None:
+                    y = fire("F121",
+                             f"registered backend `{cls.name}` does not "
+                             f"declare `{flag}` explicitly (directly or via "
+                             "a concrete base) — protocol defaults hide "
+                             "flag drift; declare it")
+                    if y:
+                        yield y
+
+        # F122 / F123 — deletion contract vs implementation
+        has_delete = _has(classes, cls, "delete")
+        if has_delete and not supports_deletion:
+            hit = resolve_attr(classes, cls, "delete",
+                               include_protocol=False)
+            ln = hit[1].lineno if hit and hit[0].rel == f.rel else anchor
+            y = fire("F122",
+                     f"`{cls.name}.delete` is implemented but resolved "
+                     "supports_deletion is False — declare "
+                     "supports_deletion=True or drop the dead override", ln)
+            if y:
+                yield y
+        if supports_deletion and not has_delete:
+            y = fire("F123",
+                     f"`{cls.name}` declares supports_deletion=True but "
+                     "never implements delete() — the inherited protocol "
+                     "default raises NotImplementedError")
+            if y:
+                yield y
+
+        # F124 — fused backends still need search for the read path
+        if (_has(classes, cls, "fused_step")
+                and not _has(classes, cls, "search")):
+            y = fire("F124",
+                     f"`{cls.name}` defines fused_step but no real "
+                     "search() — DedupPipeline.query and the cluster read "
+                     "replicas call search directly")
+            if y:
+                yield y
+
+        # F125 — required surface on registered backends
+        if is_registered:
+            missing = [m for m in REQUIRED_SURFACE
+                       if not _has(classes, cls, m)]
+            if missing:
+                y = fire("F125",
+                         f"registered backend `{cls.name}` is missing "
+                         f"required protocol members: {', '.join(missing)}")
+                if y:
+                    yield y
+
+        # F126 — slot logging
+        if track_slots and not _has(classes, cls, "pop_slot_log",
+                                    with_protocol_defaults=True):
+            y = fire("F126",
+                     f"`{cls.name}` sets track_slots=True but pop_slot_log "
+                     "is not resolvable — lifecycle eviction would lose "
+                     "slot ids")
+            if y:
+                yield y
+
+        # F127 — lifecycle flags vs implementations
+        if supports_growth and not _has(classes, cls, "grow"):
+            y = fire("F127",
+                     f"`{cls.name}` resolves supports_growth=True but "
+                     "implements no grow() — declare supports_growth=False "
+                     "or implement it")
+            if y:
+                yield y
+        if supports_snapshots and not (_has(classes, cls, "save")
+                                       and _has(classes, cls, "restore")):
+            y = fire("F127",
+                     f"`{cls.name}` resolves supports_snapshots=True but "
+                     "lacks save()+restore() — declare "
+                     "supports_snapshots=False or implement them")
+            if y:
+                yield y

@@ -1,0 +1,84 @@
+"""F10x — host-sync hygiene inside hot-path modules.
+
+FOLD's throughput claims rest on the dedup step staying one async
+device dispatch (paper §4; the depth-2 pipelined executor overlaps
+batch N's device work with batch N+1's host work). Any host
+materialization on the hot path — `.item()`, `np.asarray`, implicit
+casts of traced values — forces a device round-trip and collapses
+the pipeline to sequential. These rules only apply to hot-path
+modules (`repro/core/`, `repro/kernels/`, `index/backends/`,
+`service/executor.py`, `service/batcher.py`); intentional syncs carry
+`# foldlint: sync-ok(<reason>)`, whole cold functions carry
+`# foldlint: cold-path`.
+"""
+from __future__ import annotations
+
+import ast
+from typing import TYPE_CHECKING, Iterator
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo, Project
+
+from foldlint import Finding
+from foldlint._ast_util import (call_name, device_tainted, dotted_name,
+                                enclosing_spans)
+
+DOCS = {
+    "F101": "explicit host-sync API (.item()/.tolist()/block_until_ready/"
+            "jax.device_get) in a hot-path module",
+    "F102": "int()/float()/bool() cast of a traced/device value in a "
+            "hot-path module (implicit device sync)",
+    "F103": "numpy materialization (np.asarray/np.array/...) in a "
+            "hot-path module (device->host transfer)",
+}
+
+_SYNC_METHODS = ("item", "tolist", "block_until_ready")
+_SYNC_FUNCS = ("jax.device_get", "jax.block_until_ready")
+_NUMPY_MATERIALIZE = ("asarray", "array", "ascontiguousarray", "asanyarray",
+                      "copy")
+_NUMPY_MODULES = ("np", "numpy", "onp")
+_CASTS = ("int", "float", "bool")
+
+
+def check(f: "FileInfo", project: "Project") -> Iterator[Finding]:
+    if not f.is_hot:
+        return
+    cold = f.cold_function_spans()
+    for node in ast.walk(f.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if enclosing_spans(cold, node.lineno):
+            continue
+        name = call_name(node) or ""
+        parts = name.split(".")
+        # F101 — explicit sync APIs (method form catches unresolvable
+        # receivers like `np.asarray(x).item()` too)
+        is_sync_method = (isinstance(node.func, ast.Attribute)
+                          and node.func.attr in _SYNC_METHODS)
+        if is_sync_method or name in _SYNC_FUNCS:
+            if not f.suppressed("F101", node):
+                label = node.func.attr if is_sync_method else parts[-1]
+                yield Finding("F101", f.rel, node.lineno, node.col_offset,
+                              f"host sync `{label}` on the hot path — "
+                              "stalls async dispatch; move off the hot path "
+                              "or annotate `# foldlint: sync-ok(<reason>)`")
+            continue
+        # F103 — numpy materialization of (potentially) device arrays
+        if (len(parts) == 2 and parts[0] in _NUMPY_MODULES
+                and parts[1] in _NUMPY_MATERIALIZE):
+            if not f.suppressed("F103", node):
+                yield Finding("F103", f.rel, node.lineno, node.col_offset,
+                              f"`{name}` materializes to host on the hot "
+                              "path — keep data on device or annotate "
+                              "`# foldlint: sync-ok(<reason>)`")
+            continue
+        # F102 — host casts of device-tainted expressions
+        if (name in _CASTS and len(node.args) == 1
+                and device_tainted(node.args[0])):
+            if not f.suppressed("F102", node):
+                arg = dotted_name(node.args[0])
+                what = f" of `{arg}`" if arg else ""
+                yield Finding("F102", f.rel, node.lineno, node.col_offset,
+                              f"`{name}()` cast{what} forces a device sync "
+                              "on the hot path — keep it traced or annotate "
+                              "`# foldlint: sync-ok(<reason>)`")

@@ -1,0 +1,203 @@
+"""F11x — jit / donation hygiene.
+
+F111  jax.jit / jax.pmap / pl.pallas_call constructed inside a loop or
+      comprehension: every construction is a fresh callable with a fresh
+      trace cache, so the XLA program recompiles per iteration. Hoist
+      the jitted callable to module scope (the repo convention:
+      `@functools.partial(jax.jit, static_argnames=...)`).
+F112  Python `if`/`while` on an expression containing a direct
+      jnp./lax. call: under trace this is a ConcretizationTypeError; in
+      eager hot paths it is an implicit blocking sync. Use `lax.cond` /
+      `jnp.where`, or compute the predicate on host data.
+F113  a variable passed in a donated argument position (the callee was
+      declared with `donate_argnums`/`donate_argnames`) is read again
+      after the donating call without being rebound: the buffer was
+      handed to XLA and may be invalid. The idiomatic
+      `state = hnsw_insert(cfg, state, ...)` rebinding is fine.
+"""
+from __future__ import annotations
+
+import ast
+from typing import TYPE_CHECKING, Iterator
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo, Project
+
+from foldlint import Finding
+from foldlint._ast_util import call_name
+
+DOCS = {
+    "F111": "jit/pallas_call constructed inside a loop (per-iteration "
+            "recompilation hazard)",
+    "F112": "Python branch on a jnp/lax expression (traced-bool branch / "
+            "implicit sync)",
+    "F113": "donated argument read after the donating call (buffer handed "
+            "to XLA)",
+}
+
+_JIT_CONSTRUCTORS = ("jax.jit", "jax.pjit", "jax.pmap", "pl.pallas_call",
+                     "pallas_call", "jax.experimental.pallas.pallas_call")
+_LOOP_NODES = (ast.For, ast.AsyncFor, ast.While, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+_BRANCH_PREFIXES = ("jnp.", "lax.", "jax.numpy.", "jax.lax.")
+
+
+def _is_jit_construction(node: ast.Call) -> bool:
+    name = call_name(node) or ""
+    if name in _JIT_CONSTRUCTORS:
+        return True
+    # functools.partial(jax.jit, ...) / partial(pl.pallas_call, ...)
+    if name.split(".")[-1] == "partial" and node.args:
+        inner = call_name(node.args[0]) if isinstance(node.args[0],
+                                                      ast.Call) else None
+        first = inner or (ast.unparse(node.args[0])
+                          if hasattr(ast, "unparse") else "")
+        return any(first.startswith(c) for c in _JIT_CONSTRUCTORS)
+    return False
+
+
+def _has_traced_branch_call(test: ast.AST) -> bool:
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub) or ""
+            if any(name.startswith(p) for p in _BRANCH_PREFIXES):
+                return True
+    return False
+
+
+def _check_loops(f: "FileInfo") -> Iterator[Finding]:
+    for loop in ast.walk(f.tree):
+        if not isinstance(loop, _LOOP_NODES):
+            continue
+        for node in ast.walk(loop):
+            if node is loop or not isinstance(node, ast.Call):
+                continue
+            if _is_jit_construction(node) and not f.suppressed("F111", node):
+                yield Finding("F111", f.rel, node.lineno, node.col_offset,
+                              f"`{call_name(node)}` constructed inside a "
+                              "loop — recompiles every iteration; hoist the "
+                              "jitted callable to module scope")
+
+
+def _check_branches(f: "FileInfo") -> Iterator[Finding]:
+    for node in ast.walk(f.tree):
+        test = None
+        # Assert is deliberately NOT checked: `assert jnp.allclose(...)` is
+        # idiomatic eager test code, not a trace hazard.
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+        elif isinstance(node, ast.IfExp):
+            test = node.test
+        if test is None or not _has_traced_branch_call(test):
+            continue
+        if not f.suppressed("F112", node if isinstance(node, ast.IfExp)
+                            else test):
+            yield Finding("F112", f.rel, test.lineno, test.col_offset,
+                          "Python branch on a jnp/lax expression — "
+                          "ConcretizationTypeError under trace, implicit "
+                          "blocking sync in eager hot paths; use lax.cond / "
+                          "jnp.where or branch on host data")
+
+
+class _DonationScan:
+    """Sequential scan of one function body tracking donated names."""
+
+    def __init__(self, f: "FileInfo", donators: dict):
+        self.f = f
+        self.donators = donators
+        self.donated: dict[str, int] = {}   # name -> donating call line
+        self.findings: list[Finding] = []
+        self.seen: set[tuple[int, str]] = set()
+
+    def _donations_in(self, node: ast.AST) -> list[tuple[str, int]]:
+        out = []
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = (call_name(sub) or "").split(".")[-1]
+            table = self.donators.get(name)
+            if not table:
+                continue
+            for idx, pname in table.items():
+                arg = sub.args[idx] if idx < len(sub.args) else None
+                if arg is None:
+                    for kw in sub.keywords:
+                        if kw.arg == pname:
+                            arg = kw.value
+                if isinstance(arg, ast.Name):
+                    out.append((arg.id, sub.lineno))
+        return out
+
+    def _reads(self, node: ast.AST) -> Iterator[ast.Name]:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                yield sub
+
+    def _targets(self, stmt: ast.stmt) -> set[str]:
+        tgts: set[str] = set()
+        if isinstance(stmt, ast.Assign):
+            nodes = stmt.targets
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            nodes = [stmt.target]
+        else:
+            return tgts
+        for t in nodes:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    tgts.add(sub.id)
+        return tgts
+
+    def run(self, body: list) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue                       # separate scope
+            # 1. reads of currently-donated names in this statement
+            for name_node in self._reads(stmt):
+                ln = self.donated.get(name_node.id)
+                if ln is None or name_node.lineno <= ln:
+                    continue
+                key = (name_node.lineno, name_node.id)
+                if key in self.seen or self.f.suppressed("F113", name_node):
+                    continue
+                self.seen.add(key)
+                self.findings.append(Finding(
+                    "F113", self.f.rel, name_node.lineno,
+                    name_node.col_offset,
+                    f"`{name_node.id}` read after being donated on line "
+                    f"{ln} — the buffer was handed to XLA; rebind the "
+                    "result or stop donating"))
+            # 2. rebinds clear donation taint
+            rebound = self._targets(stmt)
+            for name in rebound:
+                self.donated.pop(name, None)
+            # 3. new donations from this statement (unless rebound by it)
+            for name, ln in self._donations_in(stmt):
+                if name not in rebound:
+                    self.donated[name] = ln
+            # recurse into compound statements sharing this scope
+            for attr in ("body", "orelse", "finalbody"):
+                sub_body = getattr(stmt, attr, None)
+                if sub_body:
+                    self.run(sub_body)
+            for handler in getattr(stmt, "handlers", []) or []:
+                self.run(handler.body)
+
+
+def _check_donation(f: "FileInfo", donators: dict) -> Iterator[Finding]:
+    if not donators:
+        return
+    scopes = [f.tree] + [n for n in ast.walk(f.tree)
+                         if isinstance(n, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef))]
+    for scope in scopes:
+        scan = _DonationScan(f, donators)
+        body = scope.body
+        scan.run(body)
+        yield from scan.findings
+
+
+def check(f: "FileInfo", project: "Project") -> Iterator[Finding]:
+    yield from _check_loops(f)
+    yield from _check_branches(f)
+    yield from _check_donation(f, project.donators)

@@ -1,0 +1,158 @@
+"""F13x — registry opts drift.
+
+`registry.accepted_opts` derives the accepted keyword set from the
+factory's `inspect.signature` at runtime (named params minus the
+leading `cfg`, plus FoldConfig's fields when the factory takes **opts
+and forwards them into `dataclasses.replace`). These rules re-derive
+the same set from the AST and check it at every static call site, so a
+renamed factory parameter or dropped FoldConfig field fails CI instead
+of a user's `make_pipeline` call.
+
+F131  a literal keyword at a `make("key", ...)` / `make_pipeline(...)`
+      call site — or a literal `backend_opts={...}` in a ServiceConfig
+      construction — names an option the factory does not accept
+      (mirrors the runtime `validate_opts` ValueError).
+F132  a registered factory declares **opts but never forwards them
+      into any call — every opt a caller passes would be silently
+      dropped, while accepted_opts still advertises the FoldConfig
+      field names.
+"""
+from __future__ import annotations
+
+import ast
+from typing import TYPE_CHECKING, Iterator
+
+if TYPE_CHECKING:
+    from foldlint import FileInfo, Project
+
+from foldlint import Finding
+from foldlint._ast_util import call_name
+
+DOCS = {
+    "F131": "call site passes a backend opt the registered factory does "
+            "not accept",
+    "F132": "registered factory takes **opts but never forwards them "
+            "(silently dropped options)",
+}
+
+_ENTRY_POINTS = ("make", "make_pipeline")
+_FOLD_CONFIG = "FoldConfig"
+
+
+def accepted_opts_static(project: "Project", key: str) -> set | None:
+    """AST mirror of registry.accepted_opts (None = unknown backend)."""
+    fac = project.factories.get(key)
+    if fac is None:
+        return None
+    keys = set(fac.named_params)
+    if fac.has_var_kw:
+        keys.update(project.config_fields.get(_FOLD_CONFIG, ()))
+    return keys
+
+
+def _raises_spans(f: "FileInfo") -> list:
+    """Line spans of `with pytest.raises(...)` bodies — call sites in
+    there are deliberately invalid."""
+    spans = []
+    for node in ast.walk(f.tree):
+        if not isinstance(node, ast.With):
+            continue
+        for item in node.items:
+            ce = item.context_expr
+            if (isinstance(ce, ast.Call)
+                    and (call_name(ce) or "").endswith("raises")):
+                spans.append((node.lineno,
+                              getattr(node, "end_lineno", node.lineno)))
+    return spans
+
+
+def _in_spans(spans: list, lineno: int) -> bool:
+    return any(a <= lineno <= b for a, b in spans)
+
+
+def _check_entry_call(f: "FileInfo", project: "Project",
+                      node: ast.Call) -> Iterator[Finding]:
+    if not (node.args and isinstance(node.args[0], ast.Constant)
+            and isinstance(node.args[0].value, str)):
+        return
+    key = node.args[0].value
+    accepted = accepted_opts_static(project, key)
+    if accepted is None:
+        return
+    for kw in node.keywords:
+        if kw.arg is None or kw.arg == "cfg":
+            continue
+        if kw.arg not in accepted:
+            probe = kw.value
+            if not f.suppressed("F131", node):
+                yield Finding(
+                    "F131", f.rel, probe.lineno, probe.col_offset,
+                    f"backend {key!r} does not accept opt `{kw.arg}` — "
+                    f"factory `{project.factories[key].func_name}` accepts: "
+                    f"{', '.join(sorted(accepted)) or '(none)'}")
+
+
+def _service_effective_backend(node: ast.Call) -> tuple[str, ast.Dict | None]:
+    """(effective backend key, backend_opts dict literal or None) for a
+    ServiceConfig(...) construction; mirrors service.resolve_backend's
+    shards>1 -> hnsw_sharded promotion."""
+    backend = "hnsw"
+    opts_dict: ast.Dict | None = None
+    shards = None
+    for kw in node.keywords:
+        if kw.arg == "backend" and isinstance(kw.value, ast.Constant):
+            backend = kw.value.value
+        elif kw.arg == "backend_opts" and isinstance(kw.value, ast.Dict):
+            opts_dict = kw.value
+        elif kw.arg == "shards" and isinstance(kw.value, ast.Constant):
+            shards = kw.value.value
+    if (isinstance(shards, int) and shards > 1 and backend == "hnsw"):
+        backend = "hnsw_sharded"
+    return backend, opts_dict
+
+
+def _check_service_config(f: "FileInfo", project: "Project",
+                          node: ast.Call) -> Iterator[Finding]:
+    backend, opts_dict = _service_effective_backend(node)
+    if opts_dict is None or not isinstance(backend, str):
+        return
+    accepted = accepted_opts_static(project, backend)
+    if accepted is None:
+        return
+    for k in opts_dict.keys:
+        if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+            continue
+        if k.value not in accepted and not f.suppressed("F131", node):
+            yield Finding(
+                "F131", f.rel, k.lineno, k.col_offset,
+                f"backend_opts key `{k.value}` is not accepted by backend "
+                f"{backend!r} — validate_opts would reject it at serve "
+                f"time; accepted: {', '.join(sorted(accepted)) or '(none)'}")
+
+
+def check(f: "FileInfo", project: "Project") -> Iterator[Finding]:
+    raises = _raises_spans(f)
+    for node in ast.walk(f.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _in_spans(raises, node.lineno):
+            continue
+        simple = (call_name(node) or "").split(".")[-1]
+        if simple in _ENTRY_POINTS:
+            yield from _check_entry_call(f, project, node)
+        elif simple == "ServiceConfig":
+            yield from _check_service_config(f, project, node)
+
+    # F132 — factories defined in this file
+    for fac in project.factories.values():
+        if fac.rel != f.rel or not fac.has_var_kw or fac.forwards_var_kw:
+            continue
+        probe = type("N", (), {"lineno": fac.lineno,
+                               "end_lineno": fac.lineno})()
+        if not f.suppressed("F132", probe):
+            yield Finding(
+                "F132", f.rel, fac.lineno, 0,
+                f"factory `{fac.func_name}` (backend {fac.key!r}) takes "
+                f"**{fac.var_kw_name} but never forwards them — passed "
+                "options would be silently dropped while accepted_opts "
+                "advertises FoldConfig fields")

@@ -1,0 +1,51 @@
+"""Typed-contract gate: run mypy over the contract surfaces.
+
+The strict surface is pinned in mypy.ini (repo root): `index/protocol.py`,
+`index/registry.py`, `index/pipeline.py` and `cluster/` carry
+`disallow_untyped_defs` — the protocol is structural, so the type checker
+is the only thing holding its signatures and the backends' together.
+
+mypy is a dev-only dependency (requirements-dev.txt). On machines
+without it this gate SKIPS with exit 0 so the pure-AST linter stays
+usable anywhere; CI sets FOLDLINT_REQUIRE_MYPY=1, which turns a missing
+mypy into a hard failure — the typed gate can never silently vanish
+from the lint lane.
+
+Usage: python -m foldlint.typecheck [extra mypy args]
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import subprocess
+import sys
+
+# The typed contract surface (mirrors mypy.ini's per-module strictness).
+SURFACES = (
+    "src/repro/index/protocol.py",
+    "src/repro/index/registry.py",
+    "src/repro/index/pipeline.py",
+    "src/repro/cluster",
+)
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if importlib.util.find_spec("mypy") is None:
+        if os.environ.get("FOLDLINT_REQUIRE_MYPY"):
+            print("foldlint.typecheck: mypy is required "
+                  "(FOLDLINT_REQUIRE_MYPY=1) but not installed — "
+                  "pip install -r requirements-dev.txt", file=sys.stderr)
+            return 1
+        print("foldlint.typecheck: mypy not installed; skipping the typed "
+              "gate (CI enforces it via FOLDLINT_REQUIRE_MYPY=1)",
+              file=sys.stderr)
+        return 0
+    cmd = [sys.executable, "-m", "mypy", "--config-file", "mypy.ini",
+           *SURFACES, *argv]
+    print("foldlint.typecheck:", " ".join(cmd[1:]), file=sys.stderr)
+    return subprocess.call(cmd)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
