@@ -36,7 +36,8 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
 
-__all__ = ["run", "load_cells", "roofline_terms", "model_flops"]
+__all__ = ["run", "load_cells", "program_rows", "roofline_terms",
+           "model_flops"]
 
 
 def load_cells(root="experiments/dryrun"):
@@ -130,7 +131,7 @@ def roofline_terms(rec: dict) -> dict:
            "t_collective_s": t_coll, "dominant": dom[0],
            "bound_s": dom[1],
            "t_memory_upper_s": rec["bytes_per_device"] / HBM_BW}
-    if rec["arch"] != "fold_dedup":
+    if rec["arch"] not in ("fold_dedup", "fold_program"):
         mf = model_flops(rec["arch"], rec["shape"], rec["devices"])
         out["model_flops_per_device"] = mf
         out["flops_ratio"] = mf / max(rec["flops_per_device"], 1)
@@ -138,6 +139,42 @@ def roofline_terms(rec: dict) -> dict:
         # the wall-clock: useful-compute-time / bound-time
         out["roofline_fraction"] = (mf / PEAK_FLOPS) / max(dom[1], 1e-12)
     return out
+
+
+def program_rows(select=None):
+    """Roofline rows for the GATED hot-path programs (repro.analysis).
+
+    Lowers the same (maker, abstract args) specs tools/foldprog
+    fingerprints — the roofline-tagged subset — so the Pallas
+    gather-score-select headroom numbers (ROADMAP top item) and the CI
+    drift gate can never describe different programs. Single-device
+    programs: the collective term is zero; the memory term uses the same
+    args+out+2*temp buffer-traffic model as the dry-run cells."""
+    from repro.analysis import default_specs, lower_compile
+    rows = []
+    for spec in default_specs(select):
+        if "roofline" not in spec.tags:
+            continue
+        fn, args, kwargs = spec.make()
+        measure = lower_compile(fn, *args, **kwargs)
+        cost = measure.cost_analysis()
+        mem = measure.memory
+        rec = {
+            "arch": "fold_program", "shape": spec.name, "devices": 1,
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+            "wire_bytes_per_device": 0.0,
+            "memory_analysis": {"argument_size": mem["argument_bytes"],
+                                "output_size": mem["output_bytes"],
+                                "temp_size": mem["temp_bytes"]},
+        }
+        t = roofline_terms(rec)
+        rows.append((f"roofline/program/{spec.name}",
+                     round(t["bound_s"] * 1e6, 1),
+                     f"dom={t['dominant']};comp={t['t_compute_s']:.6f}s;"
+                     f"mem={t['t_memory_s']:.6f}s;"
+                     f"temp_bytes={mem['temp_bytes']}"))
+    return rows
 
 
 def run(quick: bool = False):
@@ -159,4 +196,8 @@ def run(quick: bool = False):
     if not rows:
         rows.append(("roofline/missing", 0.0,
                      "run launch/dryrun.py --all first"))
+    # the hot-path index programs need no dry-run artifacts: they lower
+    # from the foldprog-gated specs right here (quick: search only; full:
+    # every roofline-tagged spec, insert and the sharded fused step incl.)
+    rows.extend(program_rows(("hnsw/search",) if quick else None))
     return rows

@@ -1,0 +1,27 @@
+#!/usr/bin/env python
+"""Re-baseline the foldprog golden program fingerprints.
+
+Run from the repo root after an INTENDED change to a hot-path program
+(new primitive mix, different memory profile, added/removed donation):
+
+    python scripts/update_fingerprints.py
+
+then commit the JSON diff under tools/foldprog/fingerprints/ — the diff
+is the review artifact. Refuses to write while budget checks (F151-F161)
+fail: budgets describe what the program must satisfy regardless of
+baseline, so fix the program (or consciously raise its budget in the
+spec) first.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT / "tools"))
+sys.path.insert(0, str(_ROOT / "src"))
+
+from foldprog.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main(["write", *sys.argv[1:]]))

@@ -1,0 +1,33 @@
+"""repro.analysis — compile-time program analysis for the hot-path JAX
+programs (trace / lower / compile; never execute).
+
+Two halves:
+
+  programs.py  the registry of analyzable hot-path PROGRAM SPECS — each
+               backend / service surface registers `(maker, abstract args)`
+               entries for its search step, insert phases, delete/compact,
+               fused shard_map step, and the service's bucketed-shape
+               variants. Specs carry per-program budgets (temp bytes,
+               primitive counts, expected donation).
+  analyze.py   the analyzer — traces a spec to its jaxpr, `.lower()
+               .compile()`s it, and derives a JSON-able FINGERPRINT (dtype
+               audit, donation table, memory_analysis, primitive counts,
+               host-callback scan) plus budget-check violations.
+
+`tools/foldprog` drives this as a CI gate against checked-in golden
+fingerprints; `launch/dryrun.py` and `benchmarks/roofline.py` consume the
+same lowering/analysis path so there is exactly one of it in the tree.
+"""
+from repro.analysis.analyze import (CompiledMeasure, ProgramReport, Violation,
+                                    analyze_program, analyze_family,
+                                    lower_compile, memory_dict)
+from repro.analysis.programs import (ProgramBudget, ProgramSpec,
+                                     default_specs, iter_specs,
+                                     register_programs, spec_families)
+
+__all__ = [
+    "CompiledMeasure", "ProgramBudget", "ProgramReport", "ProgramSpec",
+    "Violation", "analyze_family", "analyze_program", "default_specs",
+    "iter_specs", "lower_compile", "memory_dict", "register_programs",
+    "spec_families",
+]

@@ -1,0 +1,128 @@
+"""Registry of analyzable hot-path program specs.
+
+A ProgramSpec names one jitted device program plus everything the analyzer
+needs to reason about it WITHOUT executing it: a zero-allocation maker
+returning `(jit_fn, args, kwargs)` where every array argument is a
+`jax.ShapeDtypeStruct`, the number of parameters the program is expected to
+donate, and per-program budgets.
+
+Specs are contributed by the surfaces that own the programs — each index
+backend module and the service layer registers a PROVIDER here at import —
+so the spec list tracks the code it describes: deleting a backend deletes
+its specs, and a new hot-path program is one `register_programs` entry away
+from being gated. `default_specs()` imports the provider modules lazily
+(avoiding import cycles) and materializes every spec.
+
+Shape-bucketed program FAMILIES (`ProgramSpec.family`) group the variants
+the service compiles for its bucketed batch shapes; the analyzer checks the
+family's distinct-lowering count against the bucket menu (the
+recompilation budget — one compile per bucket, ever).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Iterable
+
+__all__ = ["ProgramBudget", "ProgramSpec", "register_programs",
+           "iter_specs", "default_specs", "spec_families"]
+
+# Modules that register program providers as an import side effect. Kept
+# explicit (not discovered) so the gate's coverage is reviewable in one
+# place; extend when a new surface grows analyzable device programs.
+PROVIDER_MODULES = (
+    "repro.index.backends.hnsw",
+    "repro.index.backends.sharded",
+    "repro.index.backends.brute",
+    "repro.service.programs",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramBudget:
+    """Per-program ceilings checked at compile time (None = unchecked).
+
+    `temp_bytes` bounds XLA's scratch allocation (memory_analysis temp
+    size) — the "per-item memory cost" bound in the LSHBloom sense;
+    `peak_bytes` bounds args + outputs + temps. The primitive ceilings
+    bound the HBM-round-trip shape of the program (the roadmap's "every
+    hop round-trips through HBM" cost is a gather/scatter count here).
+    `max_programs` is a FAMILY budget: the number of distinct lowerings a
+    bucketed surface may compile over its lifetime.
+    """
+    temp_bytes: int | None = None
+    peak_bytes: int | None = None
+    gather: int | None = None
+    scatter: int | None = None
+    while_loops: int | None = None
+    max_programs: int | None = None
+    # recorded caveat, surfaced in the fingerprint and reports (e.g. the
+    # measured CPU-backend donation behavior dryrun.py used to carry as a
+    # comment)
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """One analyzable device program.
+
+    make() must be ZERO-ALLOCATION: it returns `(jit_fn, args, kwargs)`
+    where `jit_fn` is the jitted callable (donation/static config already
+    bound) and the array leaves of args/kwargs are ShapeDtypeStructs. The
+    analyzer only ever traces/lowers/compiles — never executes.
+    """
+    name: str                               # e.g. "hnsw/search"
+    make: Callable[[], tuple[Any, tuple, dict]]
+    donate_expect: int = 0                  # params that must carry donation
+    budget: ProgramBudget = ProgramBudget()
+    family: str = ""                        # recompile-budget family key
+    tags: tuple[str, ...] = ()              # e.g. ("roofline",)
+
+
+_PROVIDERS: dict[str, Callable[[], list[ProgramSpec]]] = {}
+
+
+def register_programs(key: str):
+    """Decorator: register a provider returning this surface's specs."""
+    def deco(fn: Callable[[], list[ProgramSpec]]):
+        _PROVIDERS[key] = fn
+        return fn
+    return deco
+
+
+def iter_specs(select: Iterable[str] | None = None) -> list[ProgramSpec]:
+    """Materialize registered specs (from already-imported providers).
+
+    `select` filters by exact program name OR prefix up to a "/" (so
+    "hnsw" selects every hnsw/* program).
+    """
+    specs: list[ProgramSpec] = []
+    for key in sorted(_PROVIDERS):
+        specs.extend(_PROVIDERS[key]())
+    if select is not None:
+        want = set(select)
+        specs = [s for s in specs
+                 if s.name in want or s.name.split("/")[0] in want
+                 or (s.family and s.family in want)]
+    names = [s.name for s in specs]
+    dup = {n for n in names if names.count(n) > 1}
+    if dup:
+        raise ValueError(f"duplicate program spec names: {sorted(dup)}")
+    return sorted(specs, key=lambda s: s.name)
+
+
+def default_specs(select: Iterable[str] | None = None) -> list[ProgramSpec]:
+    """Import every provider module, then materialize specs."""
+    for mod in PROVIDER_MODULES:
+        importlib.import_module(mod)
+    return iter_specs(select)
+
+
+def spec_families(specs: Iterable[ProgramSpec]
+                  ) -> dict[str, list[ProgramSpec]]:
+    """Group bucketed-shape variants by family key (singletons excluded)."""
+    fams: dict[str, list[ProgramSpec]] = {}
+    for s in specs:
+        if s.family:
+            fams.setdefault(s.family, []).append(s)
+    return fams

@@ -68,6 +68,15 @@ def popcount(words: jnp.ndarray, axis=-1) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------- distances
+def _jaccard_ratio(inter2, union2):
+    """2I / 2U as float32 under ANY dtype semantics: the bare int/int
+    true-divide this replaces promotes to float64 on an x64-enabled host
+    (foldprog F151), doubling similarity-matrix bytes."""
+    sim = (inter2.astype(jnp.float32)
+           / jnp.maximum(union2, 1).astype(jnp.float32))
+    return jnp.where(union2 > 0, sim, jnp.float32(1.0))
+
+
 def bitmap_jaccard_sim(a: jnp.ndarray, b: jnp.ndarray, pa=None, pb=None) -> jnp.ndarray:
     """Bitmap-Jaccard similarity between packed bitmaps (last dim = words).
 
@@ -80,7 +89,7 @@ def bitmap_jaccard_sim(a: jnp.ndarray, b: jnp.ndarray, pa=None, pb=None) -> jnp.
     px = popcount(a ^ b)
     union2 = pa + pb + px  # = 2U
     inter2 = pa + pb - px  # = 2I
-    return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1), 1.0)
+    return _jaccard_ratio(inter2, union2)
 
 
 def bitmap_jaccard_dist(a, b, pa=None, pb=None):
@@ -130,7 +139,7 @@ def chunked_pairwise_bitmap_jaccard(qs, db, pq=None, pb=None, *,
             px = popcount(qb[:, None, :] ^ dbb[None, :, :])
             union2 = pqb[:, None] + pbb[None, :] + px
             inter2 = pqb[:, None] + pbb[None, :] - px
-            return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1), 1.0)
+            return _jaccard_ratio(inter2, union2)
 
         blocks = jax.lax.map(col_block,
                              (db_p.reshape(nc, col_chunk, W),
@@ -158,7 +167,7 @@ def pairwise_bitmap_jaccard(qs: jnp.ndarray, db: jnp.ndarray,
     px = popcount(qs[:, None, :] ^ db[None, :, :])  # (Q, N)
     union2 = pq[:, None] + pb[None, :] + px
     inter2 = pq[:, None] + pb[None, :] - px
-    return jnp.where(union2 > 0, inter2 / jnp.maximum(union2, 1), 1.0)
+    return _jaccard_ratio(inter2, union2)
 
 
 @jax.jit

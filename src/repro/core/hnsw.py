@@ -177,6 +177,30 @@ def hnsw_init(cfg: HNSWConfig) -> HNSWState:
     )
 
 
+def abstract_state(cfg: HNSWConfig) -> HNSWState:
+    """HNSWState with ShapeDtypeStruct leaves (zero device allocation).
+
+    What the compile-time analyzer (repro.analysis) and launch dry runs
+    trace/lower against — the one place the state geometry is derived, so
+    a field added to HNSWState is automatically covered by the program
+    fingerprints."""
+    return jax.eval_shape(lambda: hnsw_init(cfg))
+
+
+def program_cache_sizes() -> dict[str, int]:
+    """Per-program compiled-variant counts for the hot-path entry points.
+
+    Reads the jit caches (no sync). The service surfaces this in stats()
+    and the recompilation-budget tests assert on deltas of it: each entry
+    should grow by exactly |batch buckets| per index geometry, ever."""
+    return {
+        "search": hnsw_search._cache_size(),
+        "insert": hnsw_insert_batch._cache_size(),
+        "delete": hnsw_delete._cache_size(),
+        "compact": hnsw_compact._cache_size(),
+    }
+
+
 def hnsw_grow(cfg: HNSWConfig, state: HNSWState,
               new_capacity: int) -> tuple[HNSWConfig, HNSWState]:
     """Functionally re-pad the dense arrays to a larger capacity.

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.programs import (ProgramBudget, ProgramSpec,
+                                     register_programs)
 from repro.core.bitmap import pairwise_minhash_jaccard
 from repro.core.dedup import FoldConfig
 from repro.index.protocol import BATCH_FIRST, DedupBackend, SigBatch, SigSpec
@@ -177,6 +179,24 @@ class BruteForceBackend(DedupBackend):
     def stats(self) -> dict:
         return {"count": self.inserted, "capacity": self.capacity,
                 "deleted": self._n_deleted, "free": len(self._free)}
+
+
+# -- analyzable program specs (repro.analysis / tools/foldprog) --------------
+@register_programs("index.backends.brute")
+def _brute_programs() -> list[ProgramSpec]:
+    def make_chunk():
+        sd = jax.ShapeDtypeStruct
+        H = FoldConfig().num_hashes
+        return _chunk_best, (sd((128, H), jnp.uint32),
+                             sd((_CHUNK, H), jnp.uint32),
+                             sd((_CHUNK,), jnp.bool_)), {}
+    return [ProgramSpec(
+        name="brute/chunk_best", make=make_chunk,
+        donate_expect=0,
+        budget=ProgramBudget(
+            temp_bytes=600_000_000, while_loops=0,
+            note="the (B, CHUNK) similarity temp IS the baseline's cost "
+                 "model — _CHUNK bounds it by construction"))]
 
 
 @register("brute")

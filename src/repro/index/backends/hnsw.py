@@ -19,10 +19,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.programs import (ProgramBudget, ProgramSpec,
+                                     register_programs)
 from repro.core.dedup import FoldConfig, bitmap_tau
-from repro.core.hnsw import (HNSWConfig, HNSWState, hnsw_compact, hnsw_delete,
-                             hnsw_grow, hnsw_init, hnsw_insert_batch,
-                             hnsw_search, sample_levels)
+from repro.core.hnsw import (HNSWConfig, HNSWState, abstract_state,
+                             hnsw_compact, hnsw_delete, hnsw_grow, hnsw_init,
+                             hnsw_insert_batch, hnsw_search, sample_levels)
 from repro.index.protocol import BATCH_FIRST, DedupBackend, SigBatch, SigSpec
 from repro.index.registry import register
 from repro.kernels import ops
@@ -523,6 +525,91 @@ class RawHNSWBackend(_HNSWLifecycle):
         return {"count": self.inserted, "capacity": self.capacity,
                 "metric": self.metric, "deleted": self._n_deleted,
                 "dead": self._n_dead, "free": len(self._free or [])}
+
+
+# -- analyzable program specs (repro.analysis / tools/foldprog) --------------
+# Pinned spec geometry, deliberately independent of FoldConfig defaults so a
+# default bump does not silently re-baseline the golden fingerprints: the
+# gate measures THESE programs, the conformance tests measure behavior.
+_SPEC_CAP = 8192      # index capacity (slots)
+_SPEC_B = 128         # batch size (the service's largest default bucket)
+_SPEC_K = 4
+# every donated HNSWState leaf must survive into the lowered alias table
+_STATE_LEAVES = len(HNSWState._fields)
+
+
+def _spec_cfg(metric: str = "bitmap_jaccard") -> HNSWConfig:
+    cfg = FoldConfig(capacity=_SPEC_CAP)
+    hcfg = cfg.hnsw()
+    if metric != "bitmap_jaccard":
+        hcfg = hcfg._replace(metric=metric, words=cfg.num_hashes)
+    return hcfg
+
+
+def _search_spec(name: str, metric: str) -> ProgramSpec:
+    def make():
+        hcfg = _spec_cfg(metric)
+        q = jax.ShapeDtypeStruct((_SPEC_B, hcfg.words), jnp.uint32)
+        return hnsw_search, (hcfg, abstract_state(hcfg), q), {"k": _SPEC_K}
+    return ProgramSpec(
+        name=name, make=make, donate_expect=0,
+        budget=ProgramBudget(temp_bytes=24_000_000, gather=220,
+                             while_loops=8),
+        tags=("roofline",))
+
+
+def _insert_args(hcfg: HNSWConfig) -> tuple:
+    sd = jax.ShapeDtypeStruct
+    return (hcfg, abstract_state(hcfg),
+            sd((_SPEC_B, hcfg.words), jnp.uint32),      # vecs
+            sd((_SPEC_B,), jnp.int32),                  # pcs
+            sd((_SPEC_B,), jnp.int32),                  # levels
+            sd((_SPEC_B,), jnp.bool_),                  # keep mask
+            sd((_SPEC_B, _SPEC_K), jnp.int32),          # seed_ids (reuse)
+            sd((_SPEC_B,), jnp.int32))                  # free_slots
+
+
+@register_programs("index.backends.hnsw")
+def _hnsw_programs() -> list[ProgramSpec]:
+    def make_insert():
+        return hnsw_insert_batch, _insert_args(_spec_cfg()), {}
+
+    def make_delete():
+        hcfg = _spec_cfg()
+        ids = jax.ShapeDtypeStruct((64,), jnp.int32)
+        return hnsw_delete, (hcfg, abstract_state(hcfg), ids), {}
+
+    def make_compact():
+        hcfg = _spec_cfg()
+        return hnsw_compact, (hcfg, abstract_state(hcfg)), {}
+
+    return [
+        _search_spec("hnsw/search", "bitmap_jaccard"),
+        _search_spec("hnsw_raw/search", "minhash_jaccard"),
+        ProgramSpec(
+            name="hnsw/insert", make=make_insert,
+            donate_expect=_STATE_LEAVES,
+            budget=ProgramBudget(
+                temp_bytes=64_000_000, scatter=200, while_loops=12,
+                note="two-phase batched insert (discover + commit); the "
+                     "donated state must alias every leaf or serving "
+                     "doubles its index footprint"),
+            tags=("roofline",)),
+        ProgramSpec(
+            name="hnsw/delete", make=make_delete,
+            donate_expect=_STATE_LEAVES,
+            budget=ProgramBudget(temp_bytes=8_000_000)),
+        ProgramSpec(
+            name="hnsw/compact", make=make_compact,
+            donate_expect=_STATE_LEAVES - 2,
+            budget=ProgramBudget(
+                temp_bytes=800_000_000,
+                note="adjacency repair scratch is capacity-quadratic-ish; "
+                     "acceptable only because compact runs off the hot "
+                     "path (lifecycle watermark). entry/top_level are "
+                     "re-derived scalars, so only 6 of the 8 donated "
+                     "leaves alias into outputs")),
+    ]
 
 
 @register("hnsw")

@@ -53,8 +53,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.programs import (ProgramBudget, ProgramSpec,
+                                     register_programs)
 from repro.core.dedup import FoldConfig, bitmap_tau
-from repro.core.hnsw import hnsw_init, sample_levels
+from repro.core.hnsw import abstract_state, hnsw_init, sample_levels
 from repro.core.sharded import (make_sharded_compact, make_sharded_dedup_step,
                                 make_sharded_delete, make_sharded_search,
                                 sharded_grow, sharded_init,
@@ -443,6 +445,48 @@ class ShardedDedupBackend(DedupBackend):
                 "shards": self.nshards, "deleted": self._n_deleted,
                 "dead": self._n_dead,
                 "free": sum(len(f) for f in self._free)}
+
+
+# -- analyzable program specs (repro.analysis / tools/foldprog) --------------
+# The fused ②-⑤ step on a PINNED single-device mesh: shard_map lowering is
+# per-shard, so one shard is enough to fingerprint the program the real mesh
+# replicates — and it keeps the golden independent of the host's device
+# count (the CI programs lane runs on one CPU device).
+_SPEC_CAP = 4096      # per-shard capacity (smaller than hnsw/: the fused
+_SPEC_B = 64          # step is the slowest compile in the gate)
+
+
+@register_programs("index.backends.sharded")
+def _sharded_programs() -> list[ProgramSpec]:
+    def make_step():
+        cfg = FoldConfig(capacity=_SPEC_CAP)
+        hcfg = cfg.hnsw()
+        mesh = jax.sharding.Mesh(
+            np.asarray(  # foldlint: sync-ok(trace-time mesh construction)
+                jax.devices()[:1]), ("data",))
+        step = jax.jit(make_sharded_dedup_step(
+            hcfg, mesh, tau=bitmap_tau(cfg), k=cfg.k, axis="data",
+            masked=True, reuse_search=True, free_slots=True))
+        one = abstract_state(hcfg)
+        states = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((1,) + s.shape, s.dtype), one)
+        sd = jax.ShapeDtypeStruct
+        return step, (states,
+                      sd((_SPEC_B, hcfg.words), jnp.uint32),   # bitmaps
+                      sd((_SPEC_B,), jnp.int32),               # pcs
+                      sd((_SPEC_B,), jnp.int32),               # levels
+                      sd((_SPEC_B,), jnp.bool_),               # valid
+                      sd((1, _SPEC_B), jnp.int32)), {}         # frees
+    return [ProgramSpec(
+        name="hnsw_sharded/fused_step", make=make_step,
+        donate_expect=0,
+        budget=ProgramBudget(
+            temp_bytes=900_000_000,
+            note="donation deliberately OFF: measured on the CPU dry-run "
+                 "backend, donating the sharded caches RAISED temp bytes "
+                 "(no aliasing model); revisit when lowering for a real "
+                 "accelerator mesh"),
+        tags=("roofline",))]
 
 
 @register("hnsw_sharded")

@@ -25,7 +25,6 @@ import argparse
 import json
 import re
 import sys
-import time
 import traceback
 
 import jax
@@ -33,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.analysis import lower_compile
 from repro.configs import get_config, list_archs
 from repro.configs.shapes import SHAPES, cells_for
 from repro.dist import act
@@ -53,6 +53,43 @@ _SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)"
                        r"\[([0-9,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
+
+# Recorded per-cell (decode) and mirrored in the hnsw_sharded program
+# spec's budget note (repro.index.backends.sharded) — a measured caveat,
+# not tribal knowledge in a comment:
+DECODE_DONATION_NOTE = (
+    "real serving donates the caches (in-place update); the CPU dry-run "
+    "backend does not model donation aliasing in its memory analysis "
+    "(measured: temp ROSE under donate_argnums), so decode temps carry an "
+    "input+output cache copy (~2x caches) — pessimistic vs TPU deployment")
+
+
+def _measure_record(measure) -> dict:
+    """Common per-cell metrics from one repro.analysis lower+compile pass
+    (the same lowering path tools/foldprog gates — there is exactly one)."""
+    hlo_text = measure.hlo_text()
+    loop_cost = analyze_hlo(hlo_text)   # loop-aware (scan bodies x trips)
+    cost = measure.cost_analysis()
+    mem = measure.memory
+    return {
+        "t_lower_s": round(measure.t_lower_s, 1),
+        "t_compile_s": round(measure.t_compile_s, 1),
+        # loop-aware per-device numbers (the roofline inputs)
+        "flops_per_device": loop_cost.flops,
+        "bytes_per_device": loop_cost.bytes,
+        "collective_bytes_per_device": dict(loop_cost.collectives),
+        "wire_bytes_per_device": loop_cost.wire_bytes,
+        # raw XLA numbers (loop bodies counted once — kept for reference)
+        "xla_flops_once": float(cost.get("flops", -1)),
+        "xla_bytes_once": float(cost.get("bytes accessed", -1)),
+        "collective_bytes_once": parse_collective_bytes(hlo_text),
+        "memory_analysis": {
+            "argument_size": mem["argument_bytes"],
+            "output_size": mem["output_bytes"],
+            "temp_size": mem["temp_bytes"],
+            "generated_code_size": mem["generated_code_bytes"],
+        },
+    }
 
 
 def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
@@ -190,7 +227,6 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     n_params = tree_size(params_abs)
 
     act.set_mesh(mesh)
-    t0 = time.perf_counter()
     if sh.kind == "train":
         opt_cfg = OptConfig(state_dtype=("bfloat16" if cfg.param_dtype ==
                                          "bfloat16" else "float32"),
@@ -205,7 +241,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         fn = jax.jit(step,
                      in_shardings=(param_sh, opt_sh, batch_sh),
                      out_shardings=(param_sh, opt_sh, None))
-        lowered = fn.lower(params_abs, opt_abs, batch)
+        fargs = (params_abs, opt_abs, batch)
     elif sh.kind == "prefill":
         step = make_prefill_step(cfg)
         batch = input_specs(cfg, shape_name)
@@ -215,7 +251,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         out_sh = NamedSharding(mesh, P(dp, None, "model"))
         fn = jax.jit(step, in_shardings=(param_sh, batch_sh),
                      out_shardings=out_sh)
-        lowered = fn.lower(params_abs, batch)
+        fargs = (params_abs, batch)
     else:  # decode
         step = make_decode_step(cfg)
         caches_abs = _abstract_caches(cfg, sh.batch, sh.seq)
@@ -226,53 +262,25 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         dp = dp_axes(mesh)
         b_rule = dp if sh.batch % int(np.prod([mesh.shape[a] for a in dp])) == 0 else None
         tok_sh = NamedSharding(mesh, P(b_rule))
-        # NOTE: real serving donates the caches (in-place update); the CPU
-        # dry-run backend does not model donation aliasing in its memory
-        # analysis (measured: temp *rose* under donate_argnums), so decode
-        # temps in §Dry-run carry an input+output cache copy (~2x caches) —
-        # pessimistic vs TPU deployment.
         fn = jax.jit(step,
                      in_shardings=(param_sh, cache_sh, tok_sh, tok_sh),
                      out_shardings=(NamedSharding(mesh, P(b_rule, "model")),
                                     cache_sh))
-        lowered = fn.lower(params_abs, caches_abs, inp["token"], inp["pos"])
-    t_lower = time.perf_counter() - t0
+        fargs = (params_abs, caches_abs, inp["token"], inp["pos"])
+
+    measure = lower_compile(fn, *fargs)
     act.clear()
-
-    t0 = time.perf_counter()
-    compiled = lowered.compile()
-    t_compile = time.perf_counter() - t0
-
-    mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    hlo_text = compiled.as_text()
-    loop_cost = analyze_hlo(hlo_text)   # loop-aware (scan bodies x trips)
-    coll = parse_collective_bytes(hlo_text)
-    n_dev = mesh.size
 
     result = {
         "arch": arch, "shape": shape_name, "kind": sh.kind,
         "grad_accum": grad_accum, "variant": variant,
-        "mesh": "x".join(str(s) for s in
-                         (mesh.devices.shape)), "devices": n_dev,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "devices": mesh.size,
         "n_params": int(n_params),
-        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
-        # loop-aware per-device numbers (the roofline inputs)
-        "flops_per_device": loop_cost.flops,
-        "bytes_per_device": loop_cost.bytes,
-        "collective_bytes_per_device": dict(loop_cost.collectives),
-        "wire_bytes_per_device": loop_cost.wire_bytes,
-        # raw XLA numbers (loop bodies counted once — kept for reference)
-        "xla_flops_once": float(cost.get("flops", -1)),
-        "xla_bytes_once": float(cost.get("bytes accessed", -1)),
-        "collective_bytes_once": coll,
-        "memory_analysis": {
-            "argument_size": getattr(mem, "argument_size_in_bytes", None),
-            "output_size": getattr(mem, "output_size_in_bytes", None),
-            "temp_size": getattr(mem, "temp_size_in_bytes", None),
-            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
-        },
     }
+    if sh.kind == "decode":
+        result["donation_note"] = DECODE_DONATION_NOTE
+    result.update(_measure_record(measure))
     return result
 
 
@@ -287,7 +295,6 @@ def _lower_fold(mesh, shape_name: str, query_chunk: int = 0,
     # paper-scale: T=4096 bitmaps, 10M-document corpus split across shards
     cfg = HNSWConfig(capacity=10_000_000 // nshards, words=128, M=32,
                      M0=64, ef_construction=128, ef_search=128, max_level=4)
-    t0 = time.perf_counter()
     step = make_sharded_dedup_step(cfg, mesh, tau=0.538, k=4, axis=axis,
                                    query_chunk=query_chunk,
                                    sub_batches=sub_batches)
@@ -302,35 +309,14 @@ def _lower_fold(mesh, shape_name: str, query_chunk: int = 0,
     dsh = NamedSharding(mesh, P(axis))
     fn = jax.jit(step, in_shardings=(state_sh, dsh, dsh, dsh),
                  out_shardings=(state_sh, NamedSharding(mesh, P())))
-    lowered = fn.lower(state_abs, bm, pc, lv)
-    t_lower = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    compiled = lowered.compile()
-    t_compile = time.perf_counter() - t0
-    mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    hlo_text = compiled.as_text()
-    loop_cost = analyze_hlo(hlo_text)
-    coll = parse_collective_bytes(hlo_text)
-    return {
+    measure = lower_compile(fn, state_abs, bm, pc, lv)
+    result = {
         "arch": "fold_dedup", "shape": shape_name, "kind": "dedup",
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
         "devices": mesh.size, "n_params": 0,
-        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
-        "flops_per_device": loop_cost.flops,
-        "bytes_per_device": loop_cost.bytes,
-        "collective_bytes_per_device": dict(loop_cost.collectives),
-        "wire_bytes_per_device": loop_cost.wire_bytes,
-        "xla_flops_once": float(cost.get("flops", -1)),
-        "xla_bytes_once": float(cost.get("bytes accessed", -1)),
-        "collective_bytes_once": coll,
-        "memory_analysis": {
-            "argument_size": getattr(mem, "argument_size_in_bytes", None),
-            "output_size": getattr(mem, "output_size_in_bytes", None),
-            "temp_size": getattr(mem, "temp_size_in_bytes", None),
-            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
-        },
     }
+    result.update(_measure_record(measure))
+    return result
 
 
 def main():

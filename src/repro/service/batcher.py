@@ -21,7 +21,8 @@ from typing import Iterable, NamedTuple
 
 import numpy as np
 
-__all__ = ["MicroBatch", "MicroBatcher", "Backpressure", "pow2_buckets"]
+__all__ = ["MicroBatch", "MicroBatcher", "Backpressure",
+           "default_batch_buckets", "pow2_buckets"]
 
 
 class Backpressure(RuntimeError):
@@ -69,6 +70,16 @@ def pow2_buckets(lo: int, hi: int) -> tuple[int, ...]:
     return tuple(out)
 
 
+def default_batch_buckets(max_batch: int) -> tuple[int, ...]:
+    """The default batch-size menu: max_batch and its /2 /4 /8 subdivisions
+    (deduped, ascending). ONE definition on purpose — the batcher pads to
+    this menu, the program analyzer's `service/search` family lowers one
+    variant per entry, and the recompilation-budget tests assert the two
+    stay equal (compile count == menu size, for the service lifetime)."""
+    return tuple(sorted({max(max_batch // 8, 1), max(max_batch // 4, 1),
+                         max(max_batch // 2, 1), max_batch}))
+
+
 def _bucket_up(n: int, buckets: tuple[int, ...]) -> int:
     for b in buckets:
         if n <= b:
@@ -102,9 +113,7 @@ class MicroBatcher:
         if len_buckets is None:
             len_buckets = pow2_buckets(32, max_len)
         if batch_buckets is None:
-            batch_buckets = tuple(sorted({max(max_batch // 8, 1),
-                                          max(max_batch // 4, 1),
-                                          max(max_batch // 2, 1), max_batch}))
+            batch_buckets = default_batch_buckets(max_batch)
         assert batch_buckets[-1] == max_batch, (batch_buckets, max_batch)
         self.max_batch = max_batch
         self.max_wait_ms = max_wait_ms

@@ -1,0 +1,55 @@
+"""Service-surface program specs: the bucketed-shape search family.
+
+The service's MicroBatcher pads every emitted batch to the
+`default_batch_buckets` menu precisely so the number of compiled programs
+is bounded for the process lifetime. This module turns that promise into
+an analyzable artifact: one ProgramSpec per bucket, all in the
+`service/search` FAMILY, whose recompilation budget (`max_programs`) is
+the menu size itself. If a refactor adds an unbucketed shape to the hot
+path (a recompilation storm in production), the family's distinct-lowering
+count diverges from the menu and the foldprog gate fails F161; if two
+buckets collapse to the same lowering, the menu has a redundant entry and
+F161 fails the other way.
+
+The variants deliberately share the index-side spec geometry with
+`hnsw/search` (repro.index.backends.hnsw) — only the batch dimension
+varies, exactly what varies in serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.programs import (ProgramBudget, ProgramSpec,
+                                     register_programs)
+from repro.core.dedup import FoldConfig
+from repro.core.hnsw import abstract_state, hnsw_search
+from repro.service.batcher import default_batch_buckets
+
+__all__ = ["SPEC_MAX_BATCH"]
+
+# Pinned to the ServiceConfig default; spec geometry matches the index-side
+# specs (see backends/hnsw.py) so the family's largest variant and
+# "hnsw/search" differ only in name.
+SPEC_MAX_BATCH = 128
+_SPEC_CAP = 8192
+_SPEC_K = 4
+
+
+def _variant(B: int, n_buckets: int) -> ProgramSpec:
+    def make():
+        hcfg = FoldConfig(capacity=_SPEC_CAP).hnsw()
+        q = jax.ShapeDtypeStruct((B, hcfg.words), jnp.uint32)
+        return hnsw_search, (hcfg, abstract_state(hcfg), q), {"k": _SPEC_K}
+    return ProgramSpec(
+        name=f"service/search_b{B:03d}", make=make,
+        donate_expect=0, family="service/search",
+        budget=ProgramBudget(
+            temp_bytes=24_000_000, max_programs=n_buckets,
+            note="one lowering per batch bucket, for the service lifetime"))
+
+
+@register_programs("service")
+def _service_programs() -> list[ProgramSpec]:
+    buckets = default_batch_buckets(SPEC_MAX_BATCH)
+    return [_variant(B, len(buckets)) for B in buckets]

@@ -31,6 +31,7 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core.dedup import FoldConfig
+from repro.core.hnsw import program_cache_sizes
 from repro.index import make_pipeline, validate_opts
 from repro.index.exact import doc_hash
 from repro.lifecycle import LifecycleManager
@@ -406,5 +407,10 @@ class DedupService:
             "inflight_docs": self.executor.inflight_docs,
             "rejected_docs": self.metrics.counters.get("docs_rejected", 0)
             + self.batcher.rejected,
+            # process-wide jit-cache sizes for the hot-path index programs
+            # (no sync): under bucketed batching each entry is bounded by
+            # |batch_buckets| per index geometry — the recompilation-budget
+            # tests and the foldprog F161 check both key off this invariant
+            "compiled_programs": program_cache_sizes(),
         }
         return snap

@@ -1,0 +1,266 @@
+"""tools/foldprog — the compile-time program-fingerprint gate.
+
+Three layers under test:
+
+  * the analyzer and spec registry run CLEAN on the real tree (trace-level
+    checks over every registered spec; full lower+compile on the cheap
+    ones — CI's `programs` lane runs the full gate including goldens);
+  * MUTATION CANARIES: a seeded float64 promotion in core/hnsw.py and a
+    deleted donate_argnums on the batched insert must each fail the gate
+    with the offending program and check named (the acceptance criteria
+    for the gate actually guarding anything);
+  * the recompilation budget is real: driving a service across every
+    bucketed batch shape compiles exactly |batch_buckets| variants of the
+    hot-path search/insert programs, and a replay compiles nothing new.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+if str(ROOT / "tools") not in sys.path:
+    sys.path.insert(0, str(ROOT / "tools"))
+
+from repro.analysis import (ProgramSpec, analyze_family,  # noqa: E402
+                            analyze_program, default_specs, spec_families)
+from repro.core.dedup import FoldConfig  # noqa: E402
+from repro.core.hnsw import abstract_state  # noqa: E402
+from repro.service.batcher import default_batch_buckets  # noqa: E402
+
+import foldprog  # noqa: E402
+
+
+# --------------------------------------------------------------- registry
+def test_registry_covers_every_surface():
+    names = {s.name for s in default_specs()}
+    assert {"hnsw/search", "hnsw/insert", "hnsw/delete", "hnsw/compact",
+            "hnsw_raw/search", "hnsw_sharded/fused_step",
+            "brute/chunk_best"} <= names
+    buckets = default_batch_buckets(128)
+    assert {f"service/search_b{b:03d}" for b in buckets} <= names
+
+
+def test_select_by_prefix_and_family():
+    assert {s.name for s in default_specs(["brute"])} == {"brute/chunk_best"}
+    fam = default_specs(["service/search"])
+    assert len(fam) == len(default_batch_buckets(128))
+    assert all(s.family == "service/search" for s in fam)
+
+
+# ------------------------------------------------- real tree: trace-level
+def test_real_tree_trace_checks_clean():
+    """Every registered program passes the dtype/host-callback audit.
+
+    Trace-only (no compile) so this stays in the fast tier; the CI
+    `programs` lane runs the full lower+compile gate with goldens."""
+    reports = {}
+    for spec in default_specs():
+        rep = analyze_program(spec, run_compile=False)
+        reports[spec.name] = rep
+        assert rep.violations == [], "\n".join(
+            v.render() for v in rep.violations)
+        assert rep.fingerprint["x64_leaks"] == {
+            "f64": [], "interface64": [], "weak_outputs": []}, spec.name
+    # family recompile budget: one distinct lowering per bucket
+    fams = spec_families(default_specs())
+    assert "service/search" in fams
+    for fam, specs in fams.items():
+        assert analyze_family(fam, specs, reports) == []
+
+
+def test_real_tree_delete_compiles_clean():
+    """Cheapest full-compile spec: donation table + memory budget hold."""
+    spec = [s for s in default_specs() if s.name == "hnsw/delete"][0]
+    rep = analyze_program(spec)
+    assert rep.violations == [], "\n".join(v.render() for v in rep.violations)
+    assert rep.fingerprint["donated"] == spec.donate_expect > 0
+
+
+# ------------------------------------------------------ mutation canaries
+def _mutated_hnsw(tmp_path, module_name: str, old: str, new: str):
+    """Import a string-mutated copy of core/hnsw.py under a fresh module
+    name (its absolute imports keep resolving against the real repro)."""
+    src = (ROOT / "src" / "repro" / "core" / "hnsw.py").read_text()
+    assert old in src, f"canary target drifted: {old!r} not found"
+    p = tmp_path / f"{module_name}.py"
+    p.write_text(src.replace(old, new))
+    spec = importlib.util.spec_from_file_location(module_name, p)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[module_name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    except Exception:
+        sys.modules.pop(module_name, None)
+        raise
+    return mod
+
+
+def _tiny_cfg():
+    # words=32 (T=1024) keeps canary traces/compiles fast
+    return FoldConfig(capacity=1024, T=1024).hnsw()
+
+
+def test_f64_promotion_canary_fails_the_gate(tmp_path):
+    mod = _mutated_hnsw(
+        tmp_path, "hnsw_canary_f64",
+        "2.0 * px.astype(jnp.float32) / jnp.maximum(denom, 1)",
+        "2.0 * px.astype(jnp.float64) / jnp.maximum(denom, 1)")
+    hcfg = _tiny_cfg()
+
+    def make():
+        q = jax.ShapeDtypeStruct((8, hcfg.words), jnp.uint32)
+        return mod.hnsw_search, (hcfg, abstract_state(hcfg), q), {"k": 2}
+
+    rep = analyze_program(
+        ProgramSpec(name="canary/f64_search", make=make), run_compile=False)
+    checks = {v.check for v in rep.violations}
+    assert "F151" in checks, [v.render() for v in rep.violations]
+    offender = [v for v in rep.violations if v.check == "F151"][0]
+    # the report names the program and the promoted avals
+    assert offender.program == "canary/f64_search"
+    assert "float64" in offender.message
+
+
+def test_dropped_donation_canary_fails_the_gate(tmp_path):
+    mod = _mutated_hnsw(
+        tmp_path, "hnsw_canary_nodonate",
+        'static_argnames=("cfg",), donate_argnums=(1,))\n'
+        "def hnsw_insert_batch",
+        'static_argnames=("cfg",))\ndef hnsw_insert_batch')
+    hcfg = _tiny_cfg()
+    B = 16
+
+    def make():
+        sd = jax.ShapeDtypeStruct
+        return mod.hnsw_insert_batch, (
+            hcfg, abstract_state(hcfg),
+            sd((B, hcfg.words), jnp.uint32), sd((B,), jnp.int32),
+            sd((B,), jnp.int32), sd((B,), jnp.bool_),
+            sd((B, 2), jnp.int32), sd((B,), jnp.int32)), {}
+
+    rep = analyze_program(ProgramSpec(
+        name="canary/insert_nodonate", make=make,
+        donate_expect=len(mod.HNSWState._fields)))
+    offenders = [v for v in rep.violations if v.check == "F153"]
+    assert offenders, [v.render() for v in rep.violations]
+    assert offenders[0].program == "canary/insert_nodonate"
+    assert "donate_argnums dropped" in offenders[0].message
+    assert rep.fingerprint["donated"] == 0
+
+
+# ------------------------------------------------------- golden mechanics
+def _fake_report(fingerprint):
+    from repro.analysis import ProgramReport
+    return ProgramReport(name=fingerprint["program"],
+                         fingerprint=fingerprint, violations=[])
+
+
+def _fingerprint(name="toy/prog", **over):
+    fp = {"program": name, "family": "", "in_avals": ["uint32[8]"],
+          "out_avals": ["float32[8]"], "primitives": {"add": 2, "gather": 1},
+          "donated": 0, "host_callbacks": 0,
+          "x64_leaks": {"f64": [], "interface64": [], "weak_outputs": []},
+          "memory": {"argument_bytes": 32, "output_bytes": 32,
+                     "temp_bytes": 1000, "generated_code_bytes": 100},
+          "note": ""}
+    fp.update(over)
+    return fp
+
+
+def test_golden_roundtrip_and_drift(tmp_path):
+    fp = _fingerprint()
+    foldprog.write_fingerprints({"toy/prog": _fake_report(fp)}, tmp_path)
+    golden = foldprog.load_golden("toy/prog", tmp_path)
+    assert golden == json.loads(json.dumps(fp))  # JSON-stable
+    assert foldprog.compare_fingerprint("toy/prog", golden, fp) == []
+
+    # primitive-count drift is named with both sides of the diff
+    drifted = _fingerprint(primitives={"add": 2, "gather": 3})
+    viol = foldprog.compare_fingerprint("toy/prog", golden, drifted)
+    assert [v.check for v in viol] == ["F162"]
+    assert "gather: 1 (golden) -> 3 (current)" in viol[0].message
+
+    # temp bytes move within the band -> clean; outside -> drift
+    near = _fingerprint(memory=dict(fp["memory"], temp_bytes=1200))
+    assert foldprog.compare_fingerprint("toy/prog", golden, near) == []
+    far = _fingerprint(memory=dict(fp["memory"], temp_bytes=2000))
+    viol = foldprog.compare_fingerprint("toy/prog", golden, far)
+    assert viol and viol[0].check == "F162"
+
+    # missing golden points at the re-baseline command
+    viol = foldprog.compare_fingerprint("toy/other", None, fp)
+    assert viol[0].check == "F162"
+    assert "update_fingerprints" in viol[0].message
+
+
+def test_checked_in_goldens_match_registry():
+    """Every registered spec has a checked-in golden and vice versa (the
+    orphan sweep) — without recompiling anything here."""
+    names = {s.name for s in default_specs()}
+    on_disk = {p.stem.replace("__", "/")
+               for p in foldprog.FINGERPRINT_DIR.glob("*.json")}
+    assert names == on_disk
+    for name in names:
+        golden = foldprog.load_golden(name)
+        assert golden["program"] == name
+        assert golden["x64_leaks"] == {"f64": [], "interface64": [],
+                                       "weak_outputs": []}
+
+
+def test_render_report_names_program_check_and_rebaseline():
+    from repro.analysis import Violation
+    text = foldprog.render_report(
+        {"hnsw/insert": None},
+        [Violation("F153", "hnsw/insert", "0 donated, spec expects 8")])
+    assert "program hnsw/insert" in text
+    assert "F153" in text and "donated" in text
+    assert foldprog.REBASELINE in text
+
+
+# ------------------------------------------- service recompilation budget
+def test_service_compile_count_matches_bucket_menu():
+    """Drive traffic across every bucketed batch shape: the hot-path
+    search/insert programs compile exactly once per bucket, and an exact
+    replay of the same shapes compiles NOTHING new."""
+    from repro.core.hnsw import program_cache_sizes
+    from repro.service import DedupService, ServiceConfig
+
+    # unusual capacity => this test owns its jit-cache entries even when
+    # other service tests ran earlier in the process
+    fold = FoldConfig(capacity=2944, T=1024)
+    cfg = ServiceConfig(fold=fold, max_batch=16, len_buckets=(32,),
+                        max_len=32, pipeline_depth=1, stage_timer_every=0)
+    svc = DedupService(cfg)
+    buckets = default_batch_buckets(16)
+    assert svc.batcher.batch_buckets == buckets
+
+    rng = np.random.default_rng(0)
+
+    def drive():
+        for b in buckets:
+            docs = [rng.integers(0, 50_000, 24).astype(np.uint32)
+                    for _ in range(b)]
+            svc.submit(docs)
+            svc.flush()          # materialize at exactly this bucket shape
+
+    before = program_cache_sizes()
+    drive()
+    after = program_cache_sizes()
+    assert after["search"] - before["search"] == len(buckets)
+    assert after["insert"] - before["insert"] == len(buckets)
+    # the service surfaces the same counters
+    snap = svc.stats()
+    assert snap["batching"]["compiled_programs"] == after
+    assert {s[0] for s in snap["batching"]["compiled_shapes"]} == set(buckets)
+
+    drive()                      # replay: every shape already compiled
+    again = program_cache_sizes()
+    assert again["search"] == after["search"]
+    assert again["insert"] == after["insert"]
